@@ -1,0 +1,39 @@
+"""Paper Fig. 3: hardware anomaly detection. Resource contention is injected
+(processes sharing the device -> abnormal util/memory/power/temperature);
+eACGM monitors the device layer (libnvml analogue) and clusters with GMM.
+Paper accuracy: 65.12%."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (detect_with_gmm, fmt_pct, layer_train_eval,
+                               run_monitored_session, save_result)
+from repro.core.events import Layer
+
+
+def run(n_steps: int = 300, seed: int = 1):
+    t0 = time.time()
+    events, labels, _ = run_monitored_session(
+        n_steps=n_steps, kinds=["hw_contention"], seed=seed,
+        device_interval=0.01, magnitudes={"hw_contention": 0.35})
+    X_clean, X, y = layer_train_eval(events, labels, Layer.DEVICE)
+    metrics, det = detect_with_gmm(X_clean, X, y, n_components=4, seed=seed)
+    out = {
+        "metrics": metrics, "paper_accuracy_pct": 65.12,
+        "n_events": int(len(y)), "anomaly_frac": float(y.mean()),
+        "feature_names": ["util", "mem_gb", "power_w", "temp_c"],
+        "X_head": X[:512].tolist(), "labels_head": y[:512].astype(int).tolist(),
+        "wall_s": time.time() - t0,
+    }
+    print("\nFig.3 — Hardware anomaly detection (device telemetry, GMM)")
+    print(f"events={len(y)} acc={fmt_pct(metrics['accuracy'])} "
+          f"recall={fmt_pct(metrics['recall'])} f1={fmt_pct(metrics['f1'])} "
+          f"(paper acc 65.12%)")
+    save_result("fig3_hardware", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Emits a ``name,us_per_call,derived`` CSV summary at the end (one line per
+paper artifact) plus per-benchmark JSON under results/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter sessions (CI-speed)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: fig2,fig3,fig4,table1,"
+                         "table2,fig5,kernels")
+    args = ap.parse_args()
+    n = 120 if args.quick else 300
+    only = set(args.only.split(",")) if args.only else None
+
+    csv_rows = []
+
+    def record(name: str, wall_s: float, derived: str):
+        csv_rows.append((name, wall_s * 1e6, derived))
+
+    def want(key: str) -> bool:
+        return only is None or key in only
+
+    if want("fig2"):
+        from benchmarks import fig2_latency
+        t0 = time.time()
+        out = fig2_latency.run(n_steps=n)
+        accs = {k: v["metrics"]["accuracy"] for k, v in out.items()}
+        record("fig2_latency", time.time() - t0,
+               "acc=" + "/".join(f"{100*a:.1f}" for a in accs.values()))
+    if want("fig3"):
+        from benchmarks import fig3_hardware
+        t0 = time.time()
+        out = fig3_hardware.run(n_steps=n)
+        record("fig3_hardware", time.time() - t0,
+               f"acc={100*out['metrics']['accuracy']:.1f}(paper65.1)")
+    if want("fig4"):
+        from benchmarks import fig4_comm
+        t0 = time.time()
+        out = fig4_comm.run(n_steps=n)
+        record("fig4_comm", time.time() - t0,
+               f"acc={100*out['metrics']['accuracy']:.1f}(paper85.0)")
+    if want("table1"):
+        from benchmarks import table1_detectors
+        t0 = time.time()
+        res = table1_detectors.run(n_steps=n)
+        import numpy as np
+        gmm = np.mean([r["methods"]["GMM"]["accuracy"] for r in res.values()])
+        record("table1_detectors", time.time() - t0,
+               f"gmm_mean_acc={100*gmm:.1f}")
+    if want("table2"):
+        from benchmarks import table2_overhead
+        t0 = time.time()
+        rows = table2_overhead.run(n_steps=40 if args.quick else 60)
+        base = rows["no_monitoring"]["s_per_step"]
+        ea = rows["eACGM (full stack)"]["s_per_step"]
+        record("table2_overhead", time.time() - t0,
+               f"eacgm_overhead={100*(ea/base-1):.1f}pct")
+    if want("fig5"):
+        from benchmarks import fig5_sensitivity
+        t0 = time.time()
+        k_sweep, d_sweep = fig5_sensitivity.run(n_steps=n)
+        accs = [m["accuracy"] for m in k_sweep.values()]
+        record("fig5_sensitivity", time.time() - t0,
+               f"acc_range={100*min(accs):.1f}-{100*max(accs):.1f}")
+    if want("kernels"):
+        from benchmarks import kernel_bench
+        t0 = time.time()
+        rows = kernel_bench.run()
+        record("kernel_bench", time.time() - t0,
+               f"tpu_model_events_per_s={rows[-1]['events_per_s_tpu_model']:.2e}")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

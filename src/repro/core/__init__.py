@@ -1,0 +1,14 @@
+"""eACGM core: non-instrumented full-stack monitoring + GMM anomaly detection.
+
+Public API:
+    Collector      — probe suite + ring buffer (attach/detach at runtime)
+    FullStackMonitor, GMMDetector — paper Algorithms 1-2
+    FaultInjector  — pytorchfi/DCGM/chaosblade analogue
+    Governor       — anomaly -> action policies
+"""
+from repro.core.events import Event, Layer, RingBuffer, export_perfetto  # noqa: F401
+from repro.core.collector import Collector  # noqa: F401
+from repro.core.detector import DetectionResult, FullStackMonitor, GMMDetector  # noqa: F401
+from repro.core.gmm import GMM, GMMParams, fit_gmm, score_samples, detect_anomalies  # noqa: F401
+from repro.core.chaos import Fault, FaultInjector  # noqa: F401
+from repro.core.governor import Action, Governor  # noqa: F401

@@ -1,0 +1,122 @@
+"""Fault injection — the pytorchfi / DCGM-error-injection / chaosblade analogue
+(paper §V): schedule labelled faults against a monitored run.
+
+Fault kinds and the probe hook they perturb (paper §V fault matrix):
+
+* ``python_latency`` — host-side stalls (GIL/input pipeline): StepProbe.extra_latency
+                       (a REAL time.sleep — the python probe observes it live)
+* ``op_latency``     — operator/software delays (pytorchfi): StepProbe.extra_op
+* ``xla_latency``    — runtime/kernel-level slowdowns (DCGM kernel timeout):
+                       StepProbe.extra_xla (inflates the executable_run events)
+* ``hw_contention``  — co-scheduled processes stealing the device (paper §V-C):
+                       TpuTelemetryModel.contention / mem_leak_gb
+* ``net_latency``    — chaosblade network delay: CollectiveProbe.comm_scale
+* ``packet_loss``    — chaosblade loss: CollectiveProbe.drop_prob
+
+Ground truth: every step inside an active fault window is labelled anomalous,
+giving the ~5:1 normal:anomalous dataset of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Fault:
+    kind: str  # op_latency | xla_latency | hw_contention | net_latency | packet_loss
+    start_step: int
+    end_step: int
+    magnitude: float  # seconds (latency), 0-1 (contention), scale (net), prob (loss)
+
+    def active(self, step: int) -> bool:
+        return self.start_step <= step < self.end_step
+
+
+LATENCY_KINDS = ("python_latency", "op_latency", "xla_latency")
+
+
+class FaultInjector:
+    """Applies/clears faults on the collector's probes as steps advance."""
+
+    def __init__(self, faults: Sequence[Fault]):
+        self.faults = list(faults)
+
+    @staticmethod
+    def random_schedule(n_steps: int, kinds: Sequence[str],
+                        anomaly_fraction: float = 1 / 6,
+                        burst: int = 5, seed: int = 0,
+                        magnitudes: Optional[Dict[str, float]] = None
+                        ) -> "FaultInjector":
+        """Poisson-ish fault bursts covering ~anomaly_fraction of steps."""
+        rng = np.random.default_rng(seed)
+        mags = {"op_latency": 0.05, "xla_latency": 0.03,
+                "python_latency": 0.04, "hw_contention": 0.5,
+                "net_latency": 4.0, "packet_loss": 0.3}
+        mags.update(magnitudes or {})
+        n_burst_steps = int(n_steps * anomaly_fraction)
+        n_bursts = max(1, n_burst_steps // burst)
+        starts = np.sort(rng.choice(
+            np.arange(burst, n_steps - burst), n_bursts, replace=False))
+        faults = []
+        for s in starts:
+            kind = kinds[int(rng.integers(len(kinds)))]
+            mag = mags[kind] * float(rng.uniform(0.7, 1.5))
+            faults.append(Fault(kind, int(s), int(s + burst), mag))
+        return FaultInjector(faults)
+
+    def labels(self, n_steps: int) -> np.ndarray:
+        y = np.zeros(n_steps, dtype=bool)
+        for f in self.faults:
+            y[f.start_step: f.end_step] = True
+        return y
+
+    def apply(self, step: int, collector) -> List[Fault]:
+        """Set probe perturbations for this step; returns active faults.
+
+        Magnitudes get heavy-tailed per-step jitter (lognormal) — real faults
+        (scheduler stalls, retransmits, contention) are scattered, not fixed
+        offsets; a constant offset would just form its own benign-looking
+        cluster under any density model.
+        """
+        active = [f for f in self.faults if f.active(step)]
+        rng = np.random.default_rng(step * 2654435761 % (2 ** 31))
+
+        def mag(f: Fault) -> float:
+            return f.magnitude * float(rng.lognormal(0.0, 0.6))
+
+        step_probe = collector["step"]
+        coll_probe = collector["collective"]
+        dev_probe = collector["device"]
+        step_probe.extra_latency = sum(
+            mag(f) for f in active if f.kind == "python_latency")
+        step_probe.extra_op = sum(
+            mag(f) for f in active if f.kind == "op_latency")
+        step_probe.extra_xla = sum(
+            mag(f) for f in active if f.kind == "xla_latency")
+        coll_probe.comm_scale = 1.0
+        coll_probe.drop_prob = 0.0
+        for f in active:
+            if f.kind == "net_latency":
+                coll_probe.comm_scale = max(coll_probe.comm_scale, mag(f))
+            elif f.kind == "packet_loss":
+                coll_probe.drop_prob = max(coll_probe.drop_prob,
+                                           min(f.magnitude
+                                               * float(rng.uniform(0.5, 1.5)),
+                                               0.9))
+        cont = max((min(mag(f), 1.0) for f in active
+                    if f.kind == "hw_contention"), default=0.0)
+        for dev in dev_probe.devices:
+            dev.contention = cont
+        return active
+
+    def clear(self, collector) -> None:
+        collector["step"].extra_latency = 0.0
+        collector["step"].extra_op = 0.0
+        collector["step"].extra_xla = 0.0
+        collector["collective"].comm_scale = 1.0
+        collector["collective"].drop_prob = 0.0
+        for dev in collector["device"].devices:
+            dev.contention = 0.0

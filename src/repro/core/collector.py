@@ -1,0 +1,113 @@
+"""Collector: owns the ring buffer and the probe suite; the eACGM daemon.
+
+Usage (note: the model/training code is never modified — the launcher simply
+asks the collector to observe the callable and artifacts it already has):
+
+    col = Collector.standard()
+    with col.monitoring():
+        step_fn = col.observe_step_fn(step_fn, lowered=lowered)
+        for batch in data:
+            state = step_fn(state, batch)
+    report = col.drain()
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.events import Event, Layer, RingBuffer, export_perfetto
+from repro.core.probes import (CollectiveProbe, DeviceProbe, JaxRuntimeProbe,
+                               OperatorProbe, PythonProbe, Probe, StepProbe)
+
+
+class Collector:
+    def __init__(self, probes: List[Probe], capacity: int = 1_000_000):
+        self.buffer = RingBuffer(capacity)
+        self.probes = probes
+        self.t0 = time.perf_counter()
+        self._by_name = {p.name: p for p in probes}
+
+    # -- construction ---------------------------------------------------------
+    @staticmethod
+    def standard(python_sampling: int = 1, device_interval: float = 0.25,
+                 n_devices: int = 1, capacity: int = 1_000_000,
+                 with_python: bool = True,
+                 python_include=("repro", "jax")) -> "Collector":
+        op = OperatorProbe()
+        coll = CollectiveProbe()
+        dev = DeviceProbe(interval=device_interval, n_devices=n_devices)
+        step = StepProbe(operator_probe=op, collective_probe=coll,
+                         device_probe=dev)
+        probes: List[Probe] = [JaxRuntimeProbe(), op, coll, dev, step]
+        if with_python:
+            probes.insert(0, PythonProbe(include=python_include,
+                                         sample_every=python_sampling))
+        c = Collector(probes, capacity)
+        for p in probes:
+            p.current_step = lambda s=step: s.step_count
+        return c
+
+    def __getitem__(self, name: str) -> Probe:
+        return self._by_name[name]
+
+    @property
+    def step_probe(self) -> StepProbe:
+        return self._by_name["step"]
+
+    # -- lifecycle ------------------------------------------------------------
+    def attach(self) -> None:
+        for p in self.probes:
+            p.attach(self.buffer, t0=self.t0)
+
+    def detach(self) -> None:
+        for p in reversed(self.probes):
+            p.detach()
+
+    @contextlib.contextmanager
+    def monitoring(self):
+        self.attach()
+        try:
+            yield self
+        finally:
+            self.detach()
+
+    # -- observation hooks ------------------------------------------------------
+    def observe_step_fn(self, fn: Callable, *, lowered=None,
+                        sample_args: Optional[tuple] = None,
+                        flops_per_step: float = 0.0,
+                        mem_gb: float = 0.0) -> Callable:
+        """Wrap a built step callable + read its artifacts. Non-intrusive:
+        operates only on objects the launcher already holds."""
+        step = self.step_probe
+        step.flops_per_step = flops_per_step
+        step.mem_gb_per_step = mem_gb
+        if lowered is not None:
+            try:
+                hlo = lowered.as_text()
+                self._by_name["collective"].register_compiled(hlo)
+            except Exception:
+                pass
+        if sample_args is not None:
+            try:
+                self._by_name["operator"].register_fn(fn, *sample_args)
+            except Exception:
+                pass
+        return step.wrap(fn)
+
+    # -- data -----------------------------------------------------------------
+    def drain(self) -> List[Event]:
+        return self.buffer.drain()
+
+    def snapshot(self) -> List[Event]:
+        return self.buffer.snapshot()
+
+    def export_trace(self, path: str) -> str:
+        return export_perfetto(self.snapshot(), path)
+
+    def overhead_stats(self) -> Dict[str, Any]:
+        return {
+            "events": len(self.buffer),
+            "dropped": self.buffer.dropped,
+            "emitted_per_probe": {p.name: p.emitted for p in self.probes},
+        }

@@ -1,0 +1,132 @@
+"""Event model: typed trace events, lock-free-ish ring buffer, Perfetto export.
+
+The eACGM event record mirrors the paper's schema: every probe emits
+(layer, name, timestamp, duration, size, pid/tid, metadata). The ring buffer
+bounds memory exactly like the eBPF perf ring buffers the paper reads from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, Iterable, Iterator, List, Optional
+
+import numpy as np
+
+
+class Layer(str, enum.Enum):
+    """Monitored stack layers (paper Fig. 1). XLA≈CUDA, OPERATOR≈Torch,
+    COLLECTIVE≈NCCL, DEVICE≈libnvml GPU metrics."""
+
+    XLA = "xla"
+    PYTHON = "python"
+    OPERATOR = "operator"
+    COLLECTIVE = "collective"
+    DEVICE = "device"
+    STEP = "step"
+
+
+@dataclasses.dataclass
+class Event:
+    layer: Layer
+    name: str
+    ts: float  # seconds (monotonic epoch of the collector)
+    dur: float = 0.0  # seconds
+    size: float = 0.0  # bytes (messages/allocs) or generic magnitude
+    pid: int = 0
+    tid: int = 0
+    step: int = -1
+    meta: Optional[Dict[str, Any]] = None
+
+    def to_json(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["layer"] = self.layer.value
+        return d
+
+
+class RingBuffer:
+    """Bounded event buffer; overwrites oldest (like a BPF ring buffer)."""
+
+    def __init__(self, capacity: int = 1_000_000):
+        self.capacity = capacity
+        self._buf: List[Optional[Event]] = [None] * capacity
+        self._head = 0
+        self._count = 0
+        self._dropped = 0
+        self._lock = threading.Lock()
+
+    def push(self, ev: Event) -> None:
+        with self._lock:
+            if self._count == self.capacity:
+                self._dropped += 1
+            self._buf[self._head] = ev
+            self._head = (self._head + 1) % self.capacity
+            self._count = min(self._count + 1, self.capacity)
+
+    def __len__(self) -> int:
+        return self._count
+
+    @property
+    def dropped(self) -> int:
+        return self._dropped
+
+    def drain(self) -> List[Event]:
+        """Remove and return all events, oldest first."""
+        with self._lock:
+            n, head = self._count, self._head
+            start = (head - n) % self.capacity
+            out = [self._buf[(start + i) % self.capacity] for i in range(n)]
+            self._count = 0
+            return [e for e in out if e is not None]
+
+    def snapshot(self) -> List[Event]:
+        with self._lock:
+            n, head = self._count, self._head
+            start = (head - n) % self.capacity
+            return [e for e in (self._buf[(start + i) % self.capacity]
+                                for i in range(n)) if e is not None]
+
+
+# ---------------------------------------------------------------------------
+# Perfetto / Chrome-trace export (paper §III-A: "visualized via Perfetto")
+# ---------------------------------------------------------------------------
+
+_TID_BY_LAYER = {l: i for i, l in enumerate(Layer)}
+
+
+def to_chrome_trace(events: Iterable[Event]) -> Dict[str, Any]:
+    trace = []
+    for ev in events:
+        trace.append({
+            "name": ev.name,
+            "cat": ev.layer.value,
+            "ph": "X" if ev.dur else "i",
+            "ts": ev.ts * 1e6,
+            "dur": ev.dur * 1e6,
+            "pid": ev.pid or os.getpid(),
+            "tid": ev.tid or _TID_BY_LAYER[ev.layer],
+            "args": dict(ev.meta or {}, size=ev.size, step=ev.step),
+        })
+    return {"traceEvents": trace, "displayTimeUnit": "ms"}
+
+
+def export_perfetto(events: Iterable[Event], path: str) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(to_chrome_trace(events), f)
+    return path
+
+
+def events_to_arrays(events: List[Event]) -> Dict[str, np.ndarray]:
+    """Columnar view used by the feature builder."""
+    return {
+        "layer": np.array([e.layer.value for e in events]),
+        "name": np.array([e.name for e in events]),
+        "ts": np.array([e.ts for e in events], dtype=np.float64),
+        "dur": np.array([e.dur for e in events], dtype=np.float64),
+        "size": np.array([e.size for e in events], dtype=np.float64),
+        "step": np.array([e.step for e in events], dtype=np.int64),
+    }

@@ -1,0 +1,143 @@
+"""Windowed feature extraction: events -> per-layer feature matrices.
+
+Mirrors the paper's per-layer modelling: latency layers (XLA/CUDA, Python,
+Operator/Torch) use (duration, size, inter-arrival); the device layer uses
+(utilisation, memory, power, temperature); the collective layer uses
+(latency, message size, achieved bandwidth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.events import Event, Layer
+
+LATENCY_LAYERS = (Layer.XLA, Layer.PYTHON, Layer.OPERATOR, Layer.STEP)
+
+
+@dataclasses.dataclass
+class FeatureSet:
+    layer: Layer
+    X: np.ndarray  # (N, D) float64
+    steps: np.ndarray  # (N,) step id per row (-1 when unknown)
+    names: List[str]  # feature names
+    event_names: np.ndarray  # (N,) source event name
+
+
+def _gaps(ts: np.ndarray, names: np.ndarray) -> np.ndarray:
+    gap = np.zeros_like(ts)
+    last: Dict[str, float] = {}
+    for i, (t, n) in enumerate(zip(ts, names)):
+        gap[i] = t - last.get(n, t)
+        last[n] = t
+    return gap
+
+
+def build_features(events: List[Event], layer: Layer) -> Optional[FeatureSet]:
+    evs = [e for e in events if e.layer == layer and not e.name.startswith("static/")]
+    if not evs:
+        return None
+    ts = np.array([e.ts for e in evs])
+    order = np.argsort(ts, kind="stable")
+    evs = [evs[i] for i in order]
+    ts = ts[order]
+    names = np.array([e.name for e in evs])
+    steps = np.array([e.step for e in evs], dtype=np.int64)
+
+    if layer == Layer.DEVICE:
+        rows, kept = [], []
+        for i, e in enumerate(evs):
+            m = e.meta or {}
+            if "util" not in m:
+                continue  # host.process rows are tracked separately
+            rows.append([m["util"], m["mem_gb"], m["power_w"], m["temp_c"]])
+            kept.append(i)
+        if not rows:
+            return None
+        return FeatureSet(layer, np.array(rows, dtype=np.float64),
+                          steps[kept], ["util", "mem_gb", "power_w", "temp_c"],
+                          names[kept])
+
+    dur = np.array([e.dur for e in evs])
+    size = np.array([e.size for e in evs])
+    log_dur = np.log1p(dur * 1e6)
+    # per-name relative duration: "is this op slower than ITS OWN baseline" —
+    # the per-operator view the paper gets from symbol-level uprobes
+    rel = np.zeros_like(log_dur)
+    rate = np.zeros_like(log_dur)
+    n_total = len(evs)
+    for name in np.unique(names):
+        m = names == name
+        rel[m] = log_dur[m] - np.median(log_dur[m])
+        rate[m] = m.sum() / n_total
+    if layer == Layer.COLLECTIVE:
+        bw = np.where(dur > 0, size / np.maximum(dur, 1e-9), 0.0)
+        X = np.stack([log_dur, rel, np.log1p(size), np.log1p(bw)], 1)
+        return FeatureSet(layer, X, steps,
+                          ["log_lat_us", "rel_dur", "log_bytes", "log_bw"],
+                          names)
+    # NOTE: inter-arrival gaps and name-frequency features are deliberately
+    # excluded: they are window-relative, so a detector fitted on a clean
+    # window systematically mis-scores a window with holes (see tests).
+    X = np.stack([log_dur, rel, np.log1p(size)], 1)
+    return FeatureSet(layer, X, steps,
+                      ["log_dur_us", "rel_dur", "log_bytes"], names)
+
+
+class LayerFeaturizer:
+    """Learned per-layer featurization: per-name duration baselines are
+    fitted ONCE (on the reference window) and reused at detect time — a
+    detector must not re-derive its normalisation from the window it is
+    scoring (that leaks the anomalies into the baseline)."""
+
+    def __init__(self, layer: Layer):
+        self.layer = layer
+        self.medians: Dict[str, float] = {}
+        self.global_median = 0.0
+
+    def fit(self, events: List[Event]) -> Optional["LayerFeaturizer"]:
+        fs = build_features(events, self.layer)
+        if fs is None:
+            return None
+        log_dur = fs.X[:, 0]
+        for name in np.unique(fs.event_names):
+            self.medians[str(name)] = float(
+                np.median(log_dur[fs.event_names == name]))
+        self.global_median = float(np.median(log_dur))
+        return self
+
+    def transform(self, events: List[Event]) -> Optional[FeatureSet]:
+        fs = build_features(events, self.layer)
+        if fs is None:
+            return None
+        if self.layer == Layer.DEVICE:
+            return fs  # absolute telemetry features
+        base = np.array([self.medians.get(str(n), self.global_median)
+                         for n in fs.event_names])
+        X = fs.X.copy()
+        X[:, 1] = fs.X[:, 0] - base  # rel_dur vs the FITTED baseline
+        return FeatureSet(fs.layer, X, fs.steps, fs.names, fs.event_names)
+
+    def fit_transform(self, events: List[Event]) -> Optional[FeatureSet]:
+        if self.fit(events) is None:
+            return None
+        return self.transform(events)
+
+
+class Standardizer:
+    def __init__(self):
+        self.mean: Optional[np.ndarray] = None
+        self.std: Optional[np.ndarray] = None
+
+    def fit(self, X: np.ndarray) -> "Standardizer":
+        self.mean = X.mean(0)
+        self.std = np.maximum(X.std(0), 1e-9)
+        return self
+
+    def transform(self, X: np.ndarray) -> np.ndarray:
+        return (X - self.mean) / self.std
+
+    def fit_transform(self, X: np.ndarray) -> np.ndarray:
+        return self.fit(X).transform(X)

@@ -1,0 +1,68 @@
+"""Governance: map detected anomalies to operational actions (the "G" in
+eACGM). At 1000+ node scale the monitor's job is not just flagging — it must
+recommend mitigations: straggler drain, checkpoint-restart, comm re-route.
+The launcher consumes these actions (see repro.launch.train --monitor).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.detector import DetectionResult
+from repro.core.events import Layer
+
+
+@dataclasses.dataclass
+class Action:
+    kind: str  # checkpoint_now | restart_rank | throttle | reroute | alert
+    reason: str
+    severity: float  # 0..1
+    steps: List[int]
+
+
+POLICIES = {
+    Layer.STEP: ("straggler", "checkpoint_now",
+                 "persistent step-latency anomaly: snapshot state and "
+                 "consider draining the slow host"),
+    Layer.COLLECTIVE: ("comm", "reroute",
+                       "collective latency anomaly: suspect ICI/DCN link, "
+                       "re-route or restart the slice"),
+    Layer.DEVICE: ("hardware", "restart_rank",
+                   "device telemetry anomaly (contention/thermal): "
+                   "reschedule the affected process"),
+    Layer.XLA: ("runtime", "alert",
+                "runtime-layer latency anomaly: check recompilation storms"),
+    Layer.OPERATOR: ("operator", "alert",
+                     "operator-level latency anomaly: check JIT/fusion "
+                     "regressions"),
+    Layer.PYTHON: ("host", "throttle",
+                   "python-layer overhead anomaly: host-side input pipeline "
+                   "or GIL contention"),
+}
+
+
+class Governor:
+    def __init__(self, rate_threshold: float = 0.25, min_events: int = 8):
+        self.rate_threshold = rate_threshold
+        self.min_events = min_events
+
+    def decide(self, results: Dict[Layer, DetectionResult]) -> List[Action]:
+        actions: List[Action] = []
+        for layer, res in results.items():
+            if len(res.flags) < self.min_events:
+                continue
+            rate = res.anomaly_rate
+            if rate < self.rate_threshold:
+                continue
+            tag, kind, reason = POLICIES.get(
+                layer, ("generic", "alert", "anomaly detected"))
+            actions.append(Action(
+                kind=kind,
+                reason=f"[{tag}] {reason} (rate={rate:.2f})",
+                severity=min(1.0, rate / max(self.rate_threshold, 1e-9) / 2),
+                steps=[int(s) for s in res.anomalous_steps()[:16]],
+            ))
+        actions.sort(key=lambda a: -a.severity)
+        return actions

@@ -1,0 +1,7 @@
+from repro.core.probes.base import Probe  # noqa: F401
+from repro.core.probes.python_probe import PythonProbe  # noqa: F401
+from repro.core.probes.jax_probe import JaxRuntimeProbe  # noqa: F401
+from repro.core.probes.operator_probe import OperatorProbe  # noqa: F401
+from repro.core.probes.collective_probe import CollectiveProbe  # noqa: F401
+from repro.core.probes.device_probe import DeviceProbe  # noqa: F401
+from repro.core.probes.step_probe import StepProbe  # noqa: F401

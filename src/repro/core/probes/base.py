@@ -1,0 +1,62 @@
+"""Probe contract: runtime attach/detach, zero user-code modification.
+
+A probe is the eBPF-uprobe analogue: it observes an existing boundary of the
+running process (profile hook, telemetry bus, compiled artifact, /proc) and
+emits `Event`s into the collector's ring buffer. Probes MUST be attachable
+and detachable at any time without the monitored code cooperating.
+"""
+from __future__ import annotations
+
+import abc
+import time
+from typing import Callable, Optional
+
+from repro.core.events import Event, RingBuffer
+
+
+class Probe(abc.ABC):
+    name: str = "probe"
+
+    def __init__(self):
+        self._sink: Optional[RingBuffer] = None
+        self._attached = False
+        self._t0 = 0.0
+        self.emitted = 0
+        self.current_step: Callable[[], int] = lambda: -1
+
+    # -- lifecycle ----------------------------------------------------------
+    def attach(self, sink: RingBuffer, t0: Optional[float] = None) -> None:
+        if self._attached:
+            return
+        self._sink = sink
+        self._t0 = time.perf_counter() if t0 is None else t0
+        self._attach()
+        self._attached = True
+
+    def detach(self) -> None:
+        if not self._attached:
+            return
+        self._detach()
+        self._attached = False
+
+    @property
+    def attached(self) -> bool:
+        return self._attached
+
+    # -- implementation hooks -------------------------------------------------
+    @abc.abstractmethod
+    def _attach(self) -> None: ...
+
+    @abc.abstractmethod
+    def _detach(self) -> None: ...
+
+    # -- emission -------------------------------------------------------------
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def emit(self, ev: Event) -> None:
+        if self._sink is not None and self._attached:
+            if ev.step < 0:
+                ev.step = self.current_step()
+            self._sink.push(ev)
+            self.emitted += 1

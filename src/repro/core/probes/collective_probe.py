@@ -1,0 +1,103 @@
+"""Collective-layer probe: the NCCL-event analogue.
+
+Message sizes come from the compiled HLO's collective ops (exact, like uprobe
+arguments on ncclAllReduce); per-step latencies come from the step-time
+decomposition plus the ICI bandwidth model. Fault injection (chaos) perturbs
+the observed latencies the way chaosblade perturbs the NIC in the paper.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict, List, Optional
+
+from repro.core.events import Event, Layer
+from repro.core.probes.base import Probe
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g. "  %ag = bf16[16,1024,128]{2,1,0} all-gather(%x), ..." (HLO text)
+_HLO_RE = re.compile(
+    r"(?P<dtype>[a-z0-9]+)\[(?P<dims>[0-9,]*)\][^ ]*\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def parse_hlo_collectives(hlo_text: str) -> List[Dict[str, Any]]:
+    """Extract collective ops with output byte sizes from HLO text."""
+    out: List[Dict[str, Any]] = []
+    for line in hlo_text.splitlines():
+        m = _HLO_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:  # async pair: count the start only
+            continue
+        dims = [int(x) for x in m.group("dims").split(",") if x]
+        elems = 1
+        for d in dims:
+            elems *= d
+        nbytes = elems * _DTYPE_BYTES.get(m.group("dtype"), 4)
+        out.append({"op": m.group("op"), "bytes": nbytes, "shape": dims})
+    return out
+
+
+def collective_bytes_by_op(hlo_text: str) -> Dict[str, float]:
+    agg: Dict[str, float] = {}
+    for rec in parse_hlo_collectives(hlo_text):
+        agg[rec["op"]] = agg.get(rec["op"], 0.0) + rec["bytes"]
+    return agg
+
+
+class CollectiveProbe(Probe):
+    name = "collective"
+
+    def __init__(self, link_bw: float = 50e9, latency_us: float = 10.0):
+        super().__init__()
+        self.link_bw = link_bw
+        self.latency_us = latency_us
+        self._schedule: List[Dict[str, Any]] = []
+        self.comm_scale = 1.0  # chaos hook: >1 under injected network faults
+        self.drop_prob = 0.0   # chaos hook: packet-loss -> retransmit inflation
+
+    def _attach(self) -> None:
+        pass
+
+    def _detach(self) -> None:
+        self._schedule = []
+
+    def register_compiled(self, hlo_text: str) -> None:
+        """Read the collective schedule off a compiled artifact (non-intrusive)."""
+        self._schedule = parse_hlo_collectives(hlo_text)
+        for rec in self._schedule[:64]:
+            self.emit(Event(layer=Layer.COLLECTIVE, name="static/" + rec["op"],
+                            ts=self.now(), size=rec["bytes"], pid=os.getpid(),
+                            meta={"shape": str(rec["shape"])}))
+
+    def observe_step(self, step: int, ts: float, rng=None) -> float:
+        """Emit per-collective latency events for one step; returns total comm
+        seconds (bandwidth model x chaos perturbation)."""
+        import random as _random
+
+        rng = rng or _random
+        total = 0.0
+        for rec in self._schedule:
+            base = rec["bytes"] / self.link_bw + self.latency_us * 1e-6
+            lat = base * self.comm_scale
+            if self.drop_prob > 0:  # retransmits under loss
+                retries = 0
+                while rng.random() < self.drop_prob and retries < 5:
+                    retries += 1
+                lat *= (1 + retries)
+            lat *= 1.0 + 0.05 * rng.random()  # jitter
+            total += lat
+            self.emit(Event(layer=Layer.COLLECTIVE, name=rec["op"], ts=ts,
+                            dur=lat, size=rec["bytes"], step=step,
+                            pid=os.getpid()))
+        return total

@@ -1,0 +1,53 @@
+"""XLA/runtime-layer probe: the CUDA-event analogue.
+
+JAX exposes a global telemetry bus (`jax.monitoring`): the runtime itself
+records compilation, lowering, backend init and dispatch durations. We attach
+listeners at runtime — zero instrumentation of user code, and the events come
+from *inside* the framework exactly like eBPF uprobes on libcudart calls.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, List
+
+import jax
+
+from repro.core.events import Event, Layer
+from repro.core.probes.base import Probe
+
+
+class JaxRuntimeProbe(Probe):
+    name = "xla"
+
+    def __init__(self):
+        super().__init__()
+        self._dur_listener: Callable = None
+        self._evt_listener: Callable = None
+
+    def _attach(self) -> None:
+        def on_duration(name: str, secs: float, **kw):
+            self.emit(Event(layer=Layer.XLA, name=name, ts=self.now(),
+                            dur=secs, pid=os.getpid(),
+                            meta={k: v for k, v in kw.items()
+                                  if isinstance(v, (int, float, str))} or None))
+
+        def on_event(name: str, **kw):
+            self.emit(Event(layer=Layer.XLA, name=name, ts=self.now(),
+                            pid=os.getpid()))
+
+        self._dur_listener = on_duration
+        self._evt_listener = on_event
+        jax.monitoring.register_event_duration_secs_listener(on_duration)
+        jax.monitoring.register_event_listener(on_event)
+
+    def _detach(self) -> None:
+        # jax.monitoring has module-level listener lists; de-register by removal.
+        from jax._src import monitoring as _mon
+
+        for lst_name in ("_event_duration_secs_listeners", "_event_listeners"):
+            lst = getattr(_mon, lst_name, None)
+            if lst is not None:
+                for target in (self._dur_listener, self._evt_listener):
+                    while target in lst:
+                        lst.remove(target)
+        self._dur_listener = self._evt_listener = None

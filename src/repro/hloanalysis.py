@@ -1,0 +1,325 @@
+"""Trip-count-corrected HLO analysis.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop (scan) bodies ONCE —
+for scan-over-layers models that undercounts FLOPs/bytes/collectives by the
+layer count. This module parses the compiled (scheduled) HLO text, builds the
+computation call graph (entry -> while bodies -> fusions -> branches), extracts
+each while loop's trip count from its condition computation, and aggregates:
+
+* dot FLOPs            2 * prod(out_shape) * prod(contracting dim sizes)
+                       (operand shapes resolved via a per-computation SSA
+                       symbol table — scheduled HLO prints operands by name)
+* HBM bytes            TPU-fusion-aware traffic model: dots charge operands +
+                       output; data-movement ops (reduce/sort/scatter/gather/
+                       slice/copy/concat/pad/collectives) charge their output;
+                       elementwise / broadcast / reshape / convert / select
+                       chains are charged ZERO — XLA:TPU fuses them into
+                       producers, and XLA:CPU's weaker fusion must not inflate
+                       the memory roofline term. Fusion interiors follow the
+                       same rule.
+* collective bytes     link-traffic model per op (ring algorithms):
+                       all-gather: out, all-reduce: 2*out,
+                       reduce-scatter: group*out (~= input), all-to-all: out,
+                       collective-permute: out
+
+each multiplied by the product of enclosing while trip counts.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that genuinely move HBM bytes even on TPU (non-fusable data movement)
+_MOVEMENT_OPS = frozenset((
+    "reduce", "sort", "scatter", "gather", "dynamic-slice",
+    "dynamic-update-slice", "copy", "copy-start", "transpose", "concatenate",
+    "pad", "slice", "reverse", "call", "custom-call", "map",
+    "select-and-scatter", "reduce-window", "cumsum", "rng", "rng-bit-generator",
+))
+
+
+def _operand_bytes(comp: "Computation", line: str, op: str) -> float:
+    total = 0.0
+    for name in _operands(line, op):
+        if name in comp.symbols:
+            dt, dims = comp.symbols[name]
+            total += _bytes(dt, dims)
+    return total
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{$")
+_DEF = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"([\w\-]+)")
+_ANY_DEF = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPES_IN = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CONST_INT = re.compile(r"=\s*s32\[\]\s+constant\((\d+)\)")
+
+
+def _bytes(dtype: str, dims_str: str) -> float:
+    elems = 1.0
+    for x in dims_str.split(","):
+        if x:
+            elems *= int(x)
+    return elems * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _elems(dims_str: str) -> float:
+    out = 1.0
+    for x in dims_str.split(","):
+        if x:
+            out *= int(x)
+    return out
+
+
+class Computation:
+    __slots__ = ("name", "lines", "flops", "bytes_out", "transcendental",
+                 "collective_bytes", "calls", "symbols", "is_entry")
+
+    def __init__(self, name: str, is_entry: bool = False):
+        self.name = name
+        self.is_entry = is_entry
+        self.lines: List[str] = []
+        self.flops = 0.0
+        self.bytes_out = 0.0
+        self.transcendental = 0.0
+        self.collective_bytes: Dict[str, float] = {}
+        self.calls: List[Tuple[str, str]] = []  # (kind, callee)
+        self.symbols: Dict[str, Tuple[str, str]] = {}  # name -> (dtype, dims)
+
+
+def _operands(line: str, op: str) -> List[str]:
+    m = re.search(re.escape(op) + r"\(([^)]*)\)", line)
+    if not m:
+        return []
+    return [a.strip().lstrip("%") for a in m.group(1).split(",") if a.strip()]
+
+
+def parse_hlo(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    current: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if s.endswith("{") and "->" in s:
+            m = _COMP_HDR.match(s)
+            if m:
+                current = Computation(m.group(2), is_entry=bool(m.group(1)))
+                comps[current.name] = current
+                if current.is_entry:
+                    entry = current.name
+                continue
+        if s == "}":
+            current = None
+            continue
+        if current is not None and s:
+            current.lines.append(s)
+    for comp in comps.values():
+        _analyze(comp, comps)
+    return comps, entry
+
+
+def _trip_count(cond: Computation, comps: Dict[str, Computation]) -> float:
+    """Scan conditions compare the induction variable against the trip-count
+    constant. Resolve the ROOT pred[] op's constant OPERAND (the max-constant
+    heuristic mis-reads conds that mention unrelated constants)."""
+    consts = {}
+    for l in cond.lines:
+        m = re.match(r"\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*s32\[\]\s+constant\((\d+)\)", l)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    root = None
+    for l in cond.lines:
+        if re.match(r"\s*ROOT\s+%?[\w\.\-]+\s*=\s*pred\[\]", l):
+            root = l
+            break
+    if root is not None:
+        args = re.search(r"\((.*?)\)", root[root.index("="):])
+        if args:
+            names = [a.strip().lstrip("%") for a in args.group(1).split(",")]
+            vals = [consts[n] for n in names if n in consts]
+            if vals:
+                return float(vals[0])
+            # compare may sit inside a called fusion: resolve its const arg
+            cm = re.search(r"calls=%?([\w\.\-]+)", root)
+            if cm and names:
+                # constant could be defined in cond and passed positionally
+                for n in names:
+                    if n in consts:
+                        return float(consts[n])
+    if consts:  # fallback: single-constant conds
+        if len(consts) == 1:
+            return float(next(iter(consts.values())))
+        return float(max(consts.values()))
+    return 1.0
+
+
+def _dot_flops(comp: Computation, line: str, out_elems: float) -> float:
+    ops = _operands(line, "dot")
+    lc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    contract = 1.0
+    if ops and lc is not None and ops[0] in comp.symbols:
+        dims = [int(x) for x in comp.symbols[ops[0]][1].split(",") if x]
+        for i in (int(x) for x in lc.group(1).split(",") if x):
+            if i < len(dims):
+                contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _group_size(line: str) -> float:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return float(len(m.group(1).split(",")))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [ngroups,group_size]
+        return float(m.group(2))
+    return 2.0
+
+
+def _analyze(comp: Computation, comps: Dict[str, Computation]) -> None:
+    # pass 1: symbol table (shaped defs only)
+    for line in comp.lines:
+        m = _DEF.match(line)
+        if m:
+            comp.symbols[m.group(1)] = (m.group(2), m.group(3))
+
+    # pass 2: costs + call graph
+    for line in comp.lines:
+        # call-graph edges (works for tuple-typed outputs too)
+        if " while(" in line:
+            b = re.search(r"body=%?([\w\.\-]+)", line)
+            c = re.search(r"condition=%?([\w\.\-]+)", line)
+            if b:
+                comp.calls.append(("while:" + (c.group(1) if c else ""),
+                                   b.group(1)))
+            continue
+        if " conditional(" in line:
+            br = re.search(r"branch_computations=\{([^}]*)\}", line) or \
+                 re.search(r"(?:true_computation|branches)=\{?([^},]*)", line)
+            if br:
+                for name in re.findall(r"%?([\w\.\-]+)", br.group(1)):
+                    if name in comps or True:
+                        comp.calls.append(("branch", name))
+        cm = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", line)
+        kind_fusion = " fusion(" in line
+
+        m = _DEF.match(line)
+        if m is None:
+            # tuple-typed outputs (async starts, multi-output fusions):
+            # cost collectives via any shapes present in the line
+            for coll in COLLECTIVES:
+                if f" {coll}(" in line or f" {coll}-start(" in line:
+                    shapes = _SHAPES_IN.findall(line)
+                    if shapes:
+                        dt, dims = shapes[-1]
+                        comp.collective_bytes[coll] = (
+                            comp.collective_bytes.get(coll, 0.0)
+                            + _coll_factor(coll, line) * _bytes(dt, dims))
+                    break
+            if cm and kind_fusion:
+                comp.calls.append(("fusion", cm.group(1)))
+            elif cm:
+                comp.calls.append(("call", cm.group(1)))
+            continue
+
+        name, dtype, dims, op = m.groups()
+        nbytes = _bytes(dtype, dims)
+        base = op.replace("-start", "").replace("-done", "")
+        if op == "dot":
+            comp.flops += _dot_flops(comp, line, _elems(dims))
+            comp.bytes_out += nbytes + _operand_bytes(comp, line, "dot")
+        elif base in COLLECTIVES:
+            if not op.endswith("-done"):
+                comp.collective_bytes[base] = (
+                    comp.collective_bytes.get(base, 0.0)
+                    + _coll_factor(base, line) * nbytes)
+            comp.bytes_out += nbytes
+        elif op in ("exponential", "log", "tanh", "logistic", "power",
+                    "rsqrt", "sqrt", "erf", "expm1", "log1p"):
+            comp.transcendental += _elems(dims)
+        elif op == "fusion":
+            if cm:
+                comp.calls.append(("fusion", cm.group(1)))
+            comp.bytes_out += nbytes
+        elif op in _MOVEMENT_OPS:
+            comp.bytes_out += nbytes
+            if cm and op in ("call", "custom-call", "map", "reduce", "sort",
+                             "scatter", "select-and-scatter", "reduce-window"):
+                comp.calls.append(("call", cm.group(1)))
+        else:
+            # elementwise / broadcast / reshape / convert / iota / compare /
+            # select / constant / parameter / tuple plumbing: fuses on TPU
+            if cm and op == "call":
+                comp.calls.append(("call", cm.group(1)))
+
+
+def _coll_factor(op: str, line: str) -> float:
+    if op == "all-reduce":
+        return 2.0  # ring: reduce-scatter + all-gather phases
+    if op == "reduce-scatter":
+        return _group_size(line)  # traffic ~= input = group * output
+    return 1.0
+
+
+class HloCostModel:
+    """Aggregated, trip-corrected costs for the entry computation."""
+
+    def __init__(self, hlo_text: str):
+        self.comps, entry = parse_hlo(hlo_text)
+        self.flops = 0.0
+        self.bytes_out = 0.0
+        self.transcendental = 0.0
+        self.collective_bytes: Dict[str, float] = {}
+        self.while_trips: Dict[str, float] = {}
+        if entry is not None:
+            self._walk(self.comps[entry], 1.0, frozenset())
+
+    def _walk(self, comp: Computation, mult: float, stack) -> None:
+        if comp.name in stack:
+            return
+        stack = stack | {comp.name}
+        self.flops += comp.flops * mult
+        self.bytes_out += comp.bytes_out * mult
+        self.transcendental += comp.transcendental * mult
+        for op, b in comp.collective_bytes.items():
+            self.collective_bytes[op] = (self.collective_bytes.get(op, 0.0)
+                                         + b * mult)
+        for kind, callee in comp.calls:
+            sub = self.comps.get(callee)
+            if sub is None:
+                continue
+            if kind.startswith("while:"):
+                cond = self.comps.get(kind[6:])
+                trips = _trip_count(cond, self.comps) if cond else 1.0
+                self.while_trips[callee] = trips
+                self._walk(sub, mult * trips, stack)
+            elif kind == "fusion":
+                # fused interiors: count flops/transcendentals, not bytes
+                self.flops += sub.flops * mult
+                self.transcendental += sub.transcendental * mult
+                for k2, c2 in sub.calls:
+                    s2 = self.comps.get(c2)
+                    if s2 is not None:
+                        self._walk(s2, mult, stack)
+            else:
+                self._walk(sub, mult, stack)
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes_out,
+            "transcendental": self.transcendental,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_total": sum(self.collective_bytes.values()),
+            "while_trips": dict(self.while_trips),
+        }

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused GMM E-step sufficient statistics.
+
+Streaming EM: one pass over X computes (N_k, sum_k gamma x, sum_k gamma xx^T,
+sum log-likelihood) with VMEM-resident accumulators, never materialising the
+(N, K) responsibility matrix in HBM. This converts the EM E+M data movement
+from 4 HBM passes (logp, resp, resp@X, cov einsum) to exactly one read of X —
+the TPU-native restructuring of the paper's sklearn EM (DESIGN.md §5).
+
+The grid dimension over N-blocks is sequential on TPU, so the accumulator
+pattern (init at program_id==0, += afterwards) is race-free by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+LOG2PI = float(np.log(2.0 * np.pi))
+
+
+def _stats_kernel(x_ref, logw_ref, mu_u_ref, u_ref, logdet_ref, nvalid_ref,
+                  nk_ref, sx_ref, sxx_ref, ll_ref):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # (bn, D)
+    u = u_ref[...].astype(jnp.float32)  # (K, D, D)
+    K, D, _ = u.shape
+    bn = x.shape[0]
+
+    xu = jax.lax.dot_general(
+        x, u.transpose(1, 0, 2).reshape(D, K * D),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(bn, K, D)
+    z = xu - mu_u_ref[...][None].astype(jnp.float32)
+    logp = (-0.5 * (D * LOG2PI + jnp.sum(z * z, axis=-1))
+            + logdet_ref[...][None].astype(jnp.float32))  # (bn, K)
+    logr = logp + logw_ref[...][None].astype(jnp.float32)
+    m = jnp.max(logr, axis=-1, keepdims=True)
+    norm = m + jnp.log(jnp.sum(jnp.exp(logr - m), axis=-1, keepdims=True))
+    resp = jnp.exp(logr - norm)  # (bn, K)
+
+    # mask padding rows (global row id >= nvalid)
+    row = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+    valid = (row < nvalid_ref[0]).astype(jnp.float32)
+    resp = resp * valid
+    norm = norm * valid
+
+    @pl.when(i == 0)
+    def _init():
+        nk_ref[...] = jnp.zeros_like(nk_ref)
+        sx_ref[...] = jnp.zeros_like(sx_ref)
+        sxx_ref[...] = jnp.zeros_like(sxx_ref)
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+
+    nk_ref[...] += jnp.sum(resp, axis=0)
+    # (K, bn) @ (bn, D) on the MXU
+    sx_ref[...] += jax.lax.dot_general(resp, x, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+    rx = resp[:, :, None] * x[:, None, :]  # (bn, K, D)
+    sxx_ref[...] += jax.lax.dot_general(
+        rx.reshape(bn, K * D), x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(K, D, D)
+    ll_ref[...] += jnp.sum(norm)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gmm_stats_pallas(X, log_weights, means, prec_chol, *, block_n: int = 1024,
+                     interpret: bool = False):
+    """One-pass E-step stats: (nk (K,), sx (K,D), sxx (K,D,D), ll ())."""
+    N, D = X.shape
+    K = means.shape[0]
+    n_blocks = pl.cdiv(N, block_n)
+    pad = n_blocks * block_n - N
+    if pad:
+        X = jnp.pad(X, ((0, pad), (0, 0)))
+    mu_u = jnp.einsum("kd,kde->ke", means.astype(jnp.float32),
+                      prec_chol.astype(jnp.float32))
+    logdet = jnp.sum(jnp.log(jnp.abs(
+        jnp.diagonal(prec_chol, axis1=-2, axis2=-1))), axis=-1)
+    nvalid = jnp.array([N], jnp.int32)
+
+    full = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    nk, sx, sxx, ll = pl.pallas_call(
+        _stats_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_n, D), lambda i: (i, 0)),
+            full(K), full(K, D), full(K, D, D), full(K), full(1),
+        ],
+        out_specs=[full(K), full(K, D), full(K, D, D), full(1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((K,), jnp.float32),
+            jax.ShapeDtypeStruct((K, D), jnp.float32),
+            jax.ShapeDtypeStruct((K, D, D), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X, log_weights, mu_u, prec_chol, logdet, nvalid)
+    return nk, sx, sxx, ll[0]

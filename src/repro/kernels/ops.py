@@ -1,0 +1,38 @@
+"""Jit'd dispatch layer: Pallas kernels on TPU, jnp oracles elsewhere.
+
+``backend`` override: "auto" (default), "pallas" (forced, interpret-mode on
+CPU — used by the allclose tests), "jnp" (oracle).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.gmm_score import gmm_best_pallas, gmm_score_pallas
+from repro.kernels.gmm_stats import gmm_stats_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gmm_score(X, means, prec_chol, *, backend: str = "auto", block_n: int = 1024):
+    if backend == "pallas" or (backend == "auto" and _on_tpu()):
+        return gmm_score_pallas(X, means, prec_chol, block_n=block_n,
+                                interpret=not _on_tpu())
+    return ref.gmm_score_ref(X, means, prec_chol)
+
+
+def gmm_best(X, means, prec_chol, *, backend: str = "auto", block_n: int = 1024):
+    if backend == "pallas" or (backend == "auto" and _on_tpu()):
+        return gmm_best_pallas(X, means, prec_chol, block_n=block_n,
+                               interpret=not _on_tpu())
+    return ref.gmm_best_ref(X, means, prec_chol)
+
+
+def gmm_stats(X, log_weights, means, prec_chol, *, backend: str = "auto",
+              block_n: int = 1024):
+    if backend == "pallas" or (backend == "auto" and _on_tpu()):
+        return gmm_stats_pallas(X, log_weights, means, prec_chol,
+                                block_n=block_n, interpret=not _on_tpu())
+    return ref.gmm_stats_ref(X, log_weights, means, prec_chol)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LOG2PI = float(np.log(2.0 * np.pi))
+
+
+def gmm_score_ref(X: jnp.ndarray, means: jnp.ndarray,
+                  prec_chol: jnp.ndarray) -> jnp.ndarray:
+    """Per-component Gaussian log densities.
+
+    X: (N, D); means: (K, D); prec_chol: (K, D, D) with Sigma^-1 = U U^T.
+    Returns (N, K) float32: log N(x | mu_k, Sigma_k).
+    """
+    X = X.astype(jnp.float32)
+    D = X.shape[-1]
+    # z_{nkd} = (x_n - mu_k) @ U_k
+    xu = jnp.einsum("nd,kde->nke", X, prec_chol.astype(jnp.float32))
+    mu_u = jnp.einsum("kd,kde->ke", means.astype(jnp.float32),
+                      prec_chol.astype(jnp.float32))
+    z = xu - mu_u[None]
+    quad = jnp.sum(z * z, axis=-1)  # (N, K)
+    logdet = jnp.sum(jnp.log(jnp.abs(
+        jnp.diagonal(prec_chol, axis1=-2, axis2=-1))), axis=-1)  # (K,)
+    return -0.5 * (D * LOG2PI + quad) + logdet[None, :]
+
+
+def gmm_best_ref(X, means, prec_chol):
+    """(max-component log density, argmax component) — Definition-1 scoring."""
+    log_p = gmm_score_ref(X, means, prec_chol)
+    return jnp.max(log_p, axis=1), jnp.argmax(log_p, axis=1).astype(jnp.int32)
+
+
+def gmm_stats_ref(X: jnp.ndarray, log_weights: jnp.ndarray, means: jnp.ndarray,
+                  prec_chol: jnp.ndarray):
+    """Fused E-step sufficient statistics (single pass over X).
+
+    Returns (nk (K,), sx (K, D), sxx (K, D, D), ll_sum ()) where resp is the
+    posterior responsibility matrix softmax_k(log_w + log_p).
+    """
+    X = X.astype(jnp.float32)
+    log_p = gmm_score_ref(X, means, prec_chol)  # (N, K)
+    log_r = log_weights[None, :].astype(jnp.float32) + log_p
+    m = jnp.max(log_r, axis=1, keepdims=True)
+    norm = m + jnp.log(jnp.sum(jnp.exp(log_r - m), axis=1, keepdims=True))
+    resp = jnp.exp(log_r - norm)  # (N, K)
+    nk = jnp.sum(resp, axis=0)
+    sx = resp.T @ X  # (K, D)
+    sxx = jnp.einsum("nk,nd,ne->kde", resp, X, X)
+    return nk, sx, sxx, jnp.sum(norm)

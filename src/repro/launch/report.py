@@ -1,0 +1,93 @@
+"""Render the dry-run/roofline results into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dirname: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        rows.append(json.load(open(path)))
+    return rows
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def render_table(rows: List[Dict], multi_pod: bool) -> str:
+    out = []
+    hdr = ("| arch | shape | status | compute(s) | memory(s) | coll(s) | "
+           "bottleneck | useful | MFU | peak HBM/dev | top collective |")
+    sep = "|" + "---|" * 11
+    out.append(hdr)
+    out.append(sep)
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if bool(r.get("multi_pod")) != multi_pod:
+            continue
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP ({r['reason'][:40]}…) "
+                       "| – | – | – | – | – | – | – | – |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | **FAIL** "
+                       f"| – | – | – | – | – | – | – | {r.get('error','')[:40]} |")
+            continue
+        rf = r["roofline"]
+        peak = rf.get("memory_analysis", {}).get("peak_bytes_per_device", 0)
+        coll = rf.get("collective_by_op", {})
+        top_coll = max(coll, key=coll.get) if coll else "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {rf['compute_s']:.4f} | "
+            f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+            f"{rf['bottleneck']} | {rf['useful_ratio']:.3f} | {r['mfu']:.3f} | "
+            f"{fmt_bytes(peak)} | {top_coll} "
+            f"({fmt_bytes(coll.get(top_coll, 0))}) |")
+    return "\n".join(out)
+
+
+def summarize(rows: List[Dict]) -> Dict:
+    ok = [r for r in rows if r["status"] == "ok"]
+    single = [r for r in ok if not r.get("multi_pod")]
+    worst = sorted(single, key=lambda r: r["mfu"])[:5]
+    coll_bound = [r for r in single
+                  if r["roofline"]["bottleneck"] == "collective"]
+    return {
+        "n_ok": len(ok),
+        "n_fail": sum(r["status"] == "fail" for r in rows),
+        "n_skip": sum(r["status"] == "skip" for r in rows),
+        "worst_mfu": [(r["arch"], r["shape"], r["mfu"]) for r in worst],
+        "collective_bound": [(r["arch"], r["shape"],
+                              r["roofline"]["collective_s"])
+                             for r in coll_bound],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--summary", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if args.summary:
+        print(json.dumps(summarize(rows), indent=1))
+        return
+    print("### Single-pod mesh (16 data x 16 model = 256 chips)\n")
+    print(render_table(rows, multi_pod=False))
+    print("\n### Multi-pod mesh (2 pods x 16 x 16 = 512 chips)\n")
+    print(render_table(rows, multi_pod=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""ShapeDtypeStruct stand-ins + sharding assembly for every dry-run cell.
+
+Nothing here allocates device memory: state/caches come from jax.eval_shape,
+inputs are ShapeDtypeStructs — weak-type-correct and shardable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.models.model import (Runtime, cache_partition_specs,
+                                init_decode_caches, init_params,
+                                param_partition_specs)
+from repro.train.step import TrainState, init_train_state, make_optimizer_for
+
+
+# ---------------------------------------------------------------------------
+# Inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct batch for one step of the given cell."""
+    B = shape.global_batch
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        batch["embeddings"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return batch
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, rt: Runtime):
+    bspec = rt.batch_spec(shape.global_batch)
+    out = {}
+    S_axis = (None,)
+    if cfg.input_mode == "tokens":
+        out["tokens"] = P(bspec, None)
+    else:
+        out["embeddings"] = P(bspec, None, None)
+    if shape.kind == "train":
+        out["labels"] = P(bspec, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train state
+# ---------------------------------------------------------------------------
+
+def _normalize(spec: P, rank: int) -> Tuple:
+    entries = tuple(spec) + (None,) * (rank - len(tuple(spec)))
+    return entries
+
+
+def opt_state_pspecs(opt_name: str, params_specs, params_shapes):
+    """Moment shardings mirror the parameter shardings (ZeRO-style: factored
+    adafactor moments drop the corresponding axis)."""
+    if opt_name == "adamw":
+        mom = params_specs
+        return {"step": P(), "mu": mom, "nu": mom,
+                "grad_norm": P(), "lr": P()}
+
+    def fac(spec, p):
+        entries = _normalize(spec, p.ndim)
+        if p.ndim >= 2:
+            return {"vr": P(*entries[:-1]),
+                    "vc": P(*(entries[:-2] + (entries[-1],)))}
+        return {"v": P(*entries)}
+
+    m = jax.tree.map(fac, params_specs, params_shapes)
+    return {"step": P(), "m": m, "grad_norm": P(), "lr": P()}
+
+
+def train_state_specs(cfg: ModelConfig, rt: Runtime, train_cfg: TrainConfig,
+                      key=None):
+    """(state ShapeDtypeStruct tree, state PartitionSpec tree)."""
+    opt = make_optimizer_for(train_cfg)
+    key = jax.random.PRNGKey(0) if key is None else key
+    state_shapes = jax.eval_shape(lambda k: init_train_state(k, cfg, opt), key)
+    pspecs = param_partition_specs(cfg, rt, state_shapes.params)
+    opt_specs = opt_state_pspecs(train_cfg.optimizer, pspecs,
+                                 state_shapes.params)
+    state_specs = TrainState(params=pspecs, opt_state=opt_specs, step=P())
+    return state_shapes, state_specs
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def decode_cache_specs(cfg: ModelConfig, shape: ShapeConfig, rt: Runtime):
+    caches = jax.eval_shape(
+        lambda: init_decode_caches(cfg, shape.global_batch, shape.seq_len))
+    cspecs = cache_partition_specs(cfg, rt, caches, shape.global_batch)
+    return caches, cspecs
+
+
+def param_specs_only(cfg: ModelConfig, rt: Runtime):
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    # serving params live in bf16
+    shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32 and s.ndim >= 1 else s, shapes)
+    return shapes, param_partition_specs(cfg, rt, shapes)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

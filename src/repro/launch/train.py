@@ -1,0 +1,164 @@
+"""Training driver with first-class eACGM monitoring.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gpt2 --reduced \
+        --steps 200 --batch 8 --seq 128 --monitor --inject-faults
+
+The --monitor flag attaches the collector at runtime: the model/step code is
+IDENTICAL with and without monitoring (the paper's zero-instrumentation
+contract). Fault tolerance: deterministic data pipeline + async checkpoints +
+auto-resume; the Governor turns detected anomalies into actions (its
+checkpoint_now action triggers an immediate snapshot).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import TrainConfig, get_arch, reduced
+from repro.data import SyntheticLMData
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import Runtime
+from repro.roofline import model_flops
+from repro.train.checkpoint import CheckpointManager
+from repro.train.step import (init_train_state, make_optimizer_for,
+                              make_train_step)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-mesh", type=int, default=0,
+                    help="data-axis size of a local mesh (0 = no mesh)")
+    ap.add_argument("--model-mesh", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--monitor", action="store_true")
+    ap.add_argument("--inject-faults", action="store_true")
+    ap.add_argument("--trace-out", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mesh = None
+    if args.data_mesh:
+        mesh = make_local_mesh(args.data_mesh, args.model_mesh)
+    rt = Runtime(mesh=mesh, compute_dtype=jnp.float32 if args.reduced
+                 else jnp.bfloat16)
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       optimizer=args.optimizer, warmup_steps=args.steps // 10)
+    opt = make_optimizer_for(tcfg)
+
+    data = SyntheticLMData(cfg, seq_len=args.seq, global_batch=args.batch,
+                           seed=args.seed)
+    key = jax.random.PRNGKey(args.seed)
+    state = init_train_state(key, cfg, opt)
+    step_fn = jax.jit(make_train_step(cfg, rt, opt,
+                                      microbatches=args.microbatches),
+                      donate_argnums=(0,))
+
+    # ---- fault tolerance: auto-resume ----
+    ckpt = None
+    start_step = 0
+    if args.checkpoint_dir:
+        ckpt = CheckpointManager(args.checkpoint_dir)
+        restored, meta, rstep = ckpt.restore_latest(state)
+        if restored is not None:
+            state, start_step = restored, rstep
+            print(f"[resume] restored checkpoint at step {rstep}")
+
+    # ---- monitoring (runtime attachment; user code unchanged) ----
+    collector = injector = governor = monitor = None
+    raw_batch = data.batch(0)
+    if args.monitor:
+        from repro.core import Collector, FaultInjector, FullStackMonitor, Governor
+
+        collector = Collector.standard(python_sampling=25,
+                                       device_interval=0.05)
+        collector.attach()
+        from repro.config import SHAPES, ShapeConfig
+        shp = ShapeConfig("run", args.seq, args.batch, "train")
+        lowered = None
+        try:
+            lowered = jax.jit(make_train_step(cfg, rt, opt)).lower(
+                state, jax.tree.map(jnp.asarray, raw_batch))
+        except Exception:
+            pass
+        step_fn = collector.observe_step_fn(
+            step_fn, lowered=lowered,
+            flops_per_step=model_flops(cfg, shp),
+            mem_gb=sum(x.size * x.dtype.itemsize for x in
+                       jax.tree.leaves(state.params)) / 2**30)
+        governor = Governor()
+        if args.inject_faults:
+            injector = FaultInjector.random_schedule(
+                args.steps, ["op_latency", "net_latency", "hw_contention"],
+                seed=args.seed)
+
+    # ---- training loop ----
+    losses = []
+    t0 = time.time()
+    fit_window = []
+    from repro.core.detector import FullStackMonitor as _FSM
+    for step in range(start_step, args.steps):
+        if injector is not None:
+            injector.apply(step, collector)
+        batch = jax.tree.map(jnp.asarray, data.batch(step))
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):8.3f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0):6.1f}s)")
+        if ckpt is not None and step and step % args.checkpoint_every == 0:
+            ckpt.save(step, state, meta={"loss": loss})
+        # periodic anomaly sweep
+        if collector is not None and step and step % 50 == 0:
+            events = collector.snapshot()
+            train_events = [e for e in events if e.step < step - 25]
+            if train_events:
+                mon = _FSM(n_components=3, min_events=48).fit(train_events)
+                results = mon.detect(events)
+                for action in governor.decide(results):
+                    print(f"[governor] {action.kind}: {action.reason}")
+                    if action.kind == "checkpoint_now" and ckpt is not None:
+                        ckpt.save(step, state, meta={"loss": loss,
+                                                     "reason": "governor"})
+    if injector is not None:
+        injector.clear(collector)
+    if ckpt is not None:
+        ckpt.save(args.steps - 1, state, meta={"loss": losses[-1]})
+        ckpt.close()
+    if collector is not None:
+        if args.trace_out:
+            collector.export_trace(args.trace_out)
+            print(f"[monitor] perfetto trace -> {args.trace_out}")
+        print("[monitor] overhead stats:", collector.overhead_stats())
+        collector.detach()
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
+          f"{args.steps - start_step} steps in {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+from repro.models.model import (  # noqa: F401
+    Runtime,
+    init_params,
+    forward,
+    loss_fn,
+    init_decode_caches,
+    decode_step,
+    param_partition_specs,
+)

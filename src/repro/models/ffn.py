@@ -1,0 +1,33 @@
+"""Dense feed-forward (SwiGLU / GELU-MLP)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import activation, fanin_init
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = {
+        "up": {"kernel": fanin_init(ks[0], (d, d_ff))},
+        "down": {"kernel": fanin_init(ks[1], (d_ff, d))},
+    }
+    if cfg.glu:
+        p["gate"] = {"kernel": fanin_init(ks[2], (d, d_ff))}
+    return p
+
+
+def ffn_forward(params, cfg: ModelConfig, x):
+    act = activation(cfg.act)
+    up = x @ params["up"]["kernel"].astype(x.dtype)
+    if cfg.glu:
+        gate = x @ params["gate"]["kernel"].astype(x.dtype)
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return h @ params["down"]["kernel"].astype(x.dtype)

@@ -1,0 +1,91 @@
+"""Primitive layers: norms, rotary embeddings, initializers, embedding table."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype=dtype)
+
+
+def fanin_init(key, shape, dtype=jnp.float32):
+    """Scaled init for projection kernels: N(0, 1/fan_in)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    return jax.random.normal(key, shape, dtype=dtype) / math.sqrt(fan_in)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(key, cfg: ModelConfig, dim: int):
+    if cfg.norm_kind == "layernorm_np":
+        return {}
+    p = {"scale": jnp.ones((dim,), jnp.float32)}
+    if cfg.norm_kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+def apply_norm(params, cfg: ModelConfig, x, eps: float = 1e-5):
+    """RMSNorm / LayerNorm / non-parametric LayerNorm, computed in fp32."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm_kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        x = x * jax.lax.rsqrt(var + eps)
+        x = x * params["scale"]
+    else:
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        x = (x - mean) * jax.lax.rsqrt(var + eps)
+        if cfg.norm_kind == "layernorm":
+            x = x * params["scale"] + params["bias"]
+    return x.astype(dtype)
+
+
+def rms_norm_gated(scale, x, gate, eps: float = 1e-5):
+    """Mamba2's gated RMSNorm: RMSNorm(x * silu(gate)) * scale."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32) * jax.nn.silu(gate.astype(jnp.float32))
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim//2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]

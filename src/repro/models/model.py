@@ -1,0 +1,582 @@
+"""Model composition: blocks, scan-over-layers, init, decode, sharding rules.
+
+One `forward`/`decode_step` pair covers all assigned families:
+dense / moe (incl. dense-residual + first-dense-layers) / ssm / hybrid /
+encoder / vlm-backbone. Layers are stacked and scanned (compact HLO — crucial
+for the 512-device dry-run compiles), with configurable remat.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, padded_vocab
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_norm, init_norm, normal_init, fanin_init
+
+
+# ---------------------------------------------------------------------------
+# Runtime context (mesh + execution knobs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    mesh: Optional[Mesh] = None
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "none"  # none | full | dots
+    kv_block: int = 1024
+    moe_capacity_factor: float = 1.25
+    fsdp: bool = False
+    model_axis: str = "model"
+    data_axis_order: Tuple[str, ...] = ("pod", "data")
+    # --- optimization knobs (hillclimb levers; defaults = recorded baseline) ---
+    strategy: str = "tp"  # tp (megatron-style) | dp (pure ZeRO-3 data parallel)
+    mixed_precision: bool = False  # bf16 fwd/bwd params+grads, fp32 master
+    attn_scores_bf16: bool = False  # bf16 qk-score writes (f32 softmax stats)
+    attn_seq_shard: bool = True  # shard attention over SEQ when heads don't divide
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        order = (self.data_axis_order + (self.model_axis,)
+                 if self.strategy == "dp" else self.data_axis_order)
+        return tuple(a for a in order if a in self.mesh.shape)
+
+    def batch_spec(self, batch: int):
+        """Largest prefix of batch axes that divides `batch` (as one spec entry)."""
+        if self.mesh is None:
+            return None
+        axes = self.batch_axes
+        n = math.prod(self.mesh.shape[a] for a in axes) if axes else 1
+        while axes and batch % n != 0:
+            axes = axes[:-1]
+            n = math.prod(self.mesh.shape[a] for a in axes) if axes else 1
+        return axes if axes else None
+
+    def model_divides(self, n: int) -> bool:
+        if self.mesh is None or self.strategy == "dp":
+            return False  # dp: the model axis is folded into data parallelism
+        return n % self.mesh.shape[self.model_axis] == 0
+
+    def shard(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def activation_spec(self, batch: int, extra=(None, None)) -> P:
+        return P(self.batch_spec(batch), *extra)
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _tf_block(params, cfg: ModelConfig, rt: Runtime, x, *, is_moe: bool):
+    h = apply_norm(params["norm1"], cfg, x)
+    h = attn.attention_forward(params["attn"], cfg, h, kv_block=rt.kv_block, rt=rt)
+    x = x + h
+    h = apply_norm(params["norm2"], cfg, x)
+    aux = jnp.zeros((), jnp.float32)
+    if is_moe:
+        # pin the MoE input to (batch->data, seq->model): flattening (B,S)
+        # B-major then yields exactly the (data, model) token sharding the
+        # shard_map in_spec wants — entry is a pure reshape, and GSPMD stops
+        # back-propagating the flat token sharding into the dense path
+        # (which caused involuntary full rematerialization all-gathers)
+        B, S = h.shape[0], h.shape[1]
+        msize = rt.mesh.shape.get(rt.model_axis, 1) if rt.mesh else 1
+        if (cfg.dense_residual  # only the dense-residual mix triggers the
+                # involuntary-remat pathology; elsewhere the pin back-
+                # propagates into the attention path and costs more
+                and rt.remat != "none"  # the pathology is bwd-side: the pin
+                # costs net collective in pure-forward (prefill) programs
+                and rt.mesh is not None and rt.strategy == "tp"
+                and S % msize == 0
+                and (B * S) % (msize * max(
+                    math.prod(rt.mesh.shape[a] for a in rt.batch_axes), 1)) == 0):
+            h_moe = rt.shard(h, P(rt.batch_spec(B), rt.model_axis, None))
+        else:
+            h_moe = h
+        y, aux = moe_mod.moe_forward(params["moe"], cfg, rt, h_moe)
+        if cfg.dense_residual:
+            if rt.mesh is not None and rt.remat != "none":  # train-only pin
+                h = rt.shard(h, rt.activation_spec(h.shape[0]))
+            y = y + ffn_mod.ffn_forward(params["ffn"], cfg, h)
+    else:
+        y = ffn_mod.ffn_forward(params["ffn"], cfg, h)
+    x = x + y
+    x = rt.shard(x, rt.activation_spec(x.shape[0]))
+    return x, aux
+
+
+def _mamba_block(params, cfg: ModelConfig, rt: Runtime, x):
+    h = apply_norm(params["norm1"], cfg, x)
+    x = x + ssm_mod.ssd_forward(params["mixer"], cfg, h)
+    return rt.shard(x, rt.activation_spec(x.shape[0]))
+
+
+def _shared_attn_block(params, cfg: ModelConfig, rt: Runtime, x):
+    """Zamba2 shared attention + MLP block (weight-tied across invocations)."""
+    h = apply_norm(params["norm1"], cfg, x)
+    h = attn.attention_forward(params["attn"], cfg, h, kv_block=rt.kv_block, rt=rt)
+    x = x + h
+    h = apply_norm(params["norm2"], cfg, x)
+    x = x + ffn_mod.ffn_forward(params["ffn"], cfg, h)
+    return rt.shard(x, rt.activation_spec(x.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_tf_layer(key, cfg: ModelConfig, is_moe: bool):
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": init_norm(ks[0], cfg, cfg.d_model),
+        "attn": attn.init_attention(ks[0], cfg),
+        "norm2": init_norm(ks[1], cfg, cfg.d_model),
+    }
+    if is_moe:
+        p["moe"] = moe_mod.init_moe(ks[2], cfg)
+        if cfg.dense_residual:
+            p["ffn"] = ffn_mod.init_ffn(ks[3], cfg, cfg.d_ff)
+    else:
+        p["ffn"] = ffn_mod.init_ffn(ks[2], cfg, cfg.d_ff)
+    return p
+
+
+def _init_mamba_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {"norm1": init_norm(ks[0], cfg, cfg.d_model),
+            "mixer": ssm_mod.init_ssm(ks[1], cfg)}
+
+
+def hybrid_structure(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, group_size, n_tail) for hybrid layer stacks."""
+    g = cfg.attn_every
+    n_groups = cfg.n_layers // g
+    return n_groups, g, cfg.n_layers - n_groups * g
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    pv = padded_vocab(cfg)
+    params: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = {"table": normal_init(ks[0], (pv, cfg.d_model))}
+    params["final_norm"] = init_norm(ks[1], cfg, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"kernel": fanin_init(ks[2], (cfg.d_model, pv))}
+
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.attn_every:
+            ng, gs, tail = hybrid_structure(cfg)
+            gkeys = jax.random.split(ks[3], ng * gs).reshape(ng, gs, 2)
+            params["layers"] = jax.vmap(jax.vmap(lambda k: _init_mamba_layer(k, cfg)))(gkeys)
+            if tail:
+                tkeys = jax.random.split(ks[4], tail)
+                params["tail"] = jax.vmap(lambda k: _init_mamba_layer(k, cfg))(tkeys)
+            sk = jax.random.split(ks[5], 4)
+            params["shared"] = {
+                "norm1": init_norm(sk[0], cfg, cfg.d_model),
+                "attn": attn.init_attention(sk[1], cfg),
+                "norm2": init_norm(sk[2], cfg, cfg.d_model),
+                "ffn": ffn_mod.init_ffn(sk[3], cfg, cfg.d_ff),
+            }
+        else:
+            lkeys = jax.random.split(ks[3], cfg.n_layers)
+            params["layers"] = jax.vmap(lambda k: _init_mamba_layer(k, cfg))(lkeys)
+    else:
+        fd = cfg.first_dense_layers if cfg.n_experts else 0
+        if fd:
+            hkeys = jax.random.split(ks[6], fd)
+            params["head_layers"] = [
+                _init_tf_layer(hkeys[i], cfg, is_moe=False) for i in range(fd)]
+        n_rest = cfg.n_layers - fd
+        lkeys = jax.random.split(ks[3], n_rest)
+        is_moe = cfg.n_experts > 0
+        params["layers"] = jax.vmap(
+            lambda k: _init_tf_layer(k, cfg, is_moe=is_moe))(lkeys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg: ModelConfig, rt: Runtime, batch: Dict[str, jnp.ndarray]):
+    if cfg.input_mode == "tokens":
+        x = params["embed"]["table"].astype(rt.compute_dtype)[batch["tokens"]]
+    else:
+        x = batch["embeddings"].astype(rt.compute_dtype)
+    return rt.shard(x, rt.activation_spec(x.shape[0]))
+
+
+def _head(params, cfg: ModelConfig, rt: Runtime, x):
+    x = apply_norm(params["final_norm"], cfg, x)
+    if cfg.tie_embeddings:
+        kernel = params["embed"]["table"].astype(x.dtype).T
+    else:
+        kernel = params["lm_head"]["kernel"].astype(x.dtype)
+    logits = x @ kernel
+    spec = P(rt.batch_spec(x.shape[0]), None,
+             rt.model_axis if rt.model_divides(padded_vocab(cfg)) else None)
+    return rt.shard(logits, spec)
+
+
+def forward(params, cfg: ModelConfig, rt: Runtime, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits (B,S,V_padded), aux_loss)."""
+    x = _embed(params, cfg, rt, batch)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("ssm", "hybrid"):
+        mamba = _remat(lambda p, h: _mamba_block(p, cfg, rt, h), rt.remat)
+        if cfg.attn_every:
+            shared = params["shared"]
+            shared_fn = _remat(lambda h: _shared_attn_block(shared, cfg, rt, h), rt.remat)
+
+            def group_body(h, gp):
+                def inner(h2, lp):
+                    return mamba(lp, h2), None
+                h, _ = jax.lax.scan(inner, h, gp)
+                return shared_fn(h), None
+
+            x, _ = jax.lax.scan(group_body, x, params["layers"])
+            if "tail" in params:
+                def tail_body(h, lp):
+                    return mamba(lp, h), None
+                x, _ = jax.lax.scan(tail_body, x, params["tail"])
+        else:
+            def body(h, lp):
+                return mamba(lp, h), None
+            x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        is_moe = cfg.n_experts > 0
+        for hp in params.get("head_layers", []):
+            blk = _remat(lambda p, h: _tf_block(p, cfg, rt, h, is_moe=False), rt.remat)
+            x, _ = blk(hp, x)
+        blk = _remat(lambda p, h: _tf_block(p, cfg, rt, h, is_moe=is_moe), rt.remat)
+
+        def body(carry, lp):
+            h, a = carry
+            h, da = blk(lp, h)
+            return (h, a + da), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
+
+    logits = _head(params, cfg, rt, x)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, cfg: ModelConfig, rt: Runtime, batch) -> Tuple[jnp.ndarray, Dict]:
+    """Mean next-token (or frame-label) cross-entropy; ignores labels < 0."""
+    logits, aux = forward(params, cfg, rt, batch)
+    labels = batch["labels"]
+    pv = padded_vocab(cfg)
+    logits = logits.astype(jnp.float32)
+    if pv != cfg.vocab_size:  # mask padded vocab columns out of the lse
+        col = jnp.arange(pv)
+        logits = jnp.where(col[None, None, :] < cfg.vocab_size, logits, -1e30)
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    # label logit without materialising one-hot (fuses into the reduce)
+    ll = jnp.sum(jnp.where(col_eq(labels, pv), logits, 0.0), axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"ce_loss": loss, "aux_loss": aux,
+                   "tokens": jnp.sum(mask)}
+
+
+def col_eq(labels, pv):
+    return jnp.arange(pv)[None, None, :] == jnp.maximum(labels, 0)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Cache pytree for a full model (stacked along layer/group dims)."""
+
+    def stack(n, make):
+        leaves = make()
+        return jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), leaves)
+
+    if cfg.family in ("ssm", "hybrid"):
+        caches: Dict[str, Any] = {}
+        if cfg.attn_every:
+            ng, gs, tail = hybrid_structure(cfg)
+            caches["layers"] = jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (ng, gs) + l.shape),
+                ssm_mod.init_ssm_cache(cfg, batch))
+            if tail:
+                caches["tail"] = stack(tail, lambda: ssm_mod.init_ssm_cache(cfg, batch))
+            caches["shared"] = stack(
+                ng, lambda: attn.init_kv_cache(cfg, batch, max_len, dtype))
+        else:
+            caches["layers"] = stack(cfg.n_layers,
+                                     lambda: ssm_mod.init_ssm_cache(cfg, batch))
+        return caches
+    fd = cfg.first_dense_layers if cfg.n_experts else 0
+    caches = {"layers": stack(cfg.n_layers - fd,
+                              lambda: attn.init_kv_cache(cfg, batch, max_len, dtype))}
+    if fd:
+        caches["head_layers"] = [attn.init_kv_cache(cfg, batch, max_len, dtype)
+                                 for _ in range(fd)]
+    return caches
+
+
+def _tf_block_decode(params, cfg, rt, x, cache, index, *, is_moe):
+    h = apply_norm(params["norm1"], cfg, x)
+    h, cache = attn.attention_decode(params["attn"], cfg, h, cache, index)
+    x = x + h
+    h = apply_norm(params["norm2"], cfg, x)
+    if is_moe:
+        y, _ = moe_mod.moe_forward(params["moe"], cfg, rt, h)
+        if cfg.dense_residual:
+            if rt.mesh is not None and rt.remat != "none":  # train-only pin
+                h = rt.shard(h, rt.activation_spec(h.shape[0]))
+            y = y + ffn_mod.ffn_forward(params["ffn"], cfg, h)
+    else:
+        y = ffn_mod.ffn_forward(params["ffn"], cfg, h)
+    return x + y, cache
+
+
+def _mamba_block_decode(params, cfg, rt, x, cache):
+    h = apply_norm(params["norm1"], cfg, x)
+    y, cache = ssm_mod.ssd_decode(params["mixer"], cfg, h, cache)
+    return x + y, cache
+
+
+def decode_step(params, cfg: ModelConfig, rt: Runtime, batch, caches, index):
+    """One token step. batch: {"tokens": (B,1)} or {"embeddings": (B,1,d)}.
+    Returns (logits (B,1,V), new_caches)."""
+    x = _embed(params, cfg, rt, batch)
+
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.attn_every:
+            shared = params["shared"]
+
+            def group_body(h, xs):
+                gp, gcache, scache = xs
+
+                def inner(h2, xs2):
+                    lp, lc = xs2
+                    h2, lc = _mamba_block_decode(lp, cfg, rt, h2, lc)
+                    return h2, lc
+
+                h, gcache = jax.lax.scan(inner, h, (gp, gcache))
+                hh = apply_norm(shared["norm1"], cfg, h)
+                hh, scache = attn.attention_decode(shared["attn"], cfg, hh, scache, index)
+                h = h + hh
+                hh = apply_norm(shared["norm2"], cfg, h)
+                h = h + ffn_mod.ffn_forward(shared["ffn"], cfg, hh)
+                return h, (gcache, scache)
+
+            x, (gc, sc) = jax.lax.scan(
+                group_body, x, (params["layers"], caches["layers"], caches["shared"]))
+            new = {"layers": gc, "shared": sc}
+            if "tail" in params:
+                def tail_body(h, xs):
+                    lp, lc = xs
+                    h, lc = _mamba_block_decode(lp, cfg, rt, h, lc)
+                    return h, lc
+                x, tc = jax.lax.scan(tail_body, x, (params["tail"], caches["tail"]))
+                new["tail"] = tc
+            caches = new
+        else:
+            def body(h, xs):
+                lp, lc = xs
+                h, lc = _mamba_block_decode(lp, cfg, rt, h, lc)
+                return h, lc
+            x, lc = jax.lax.scan(body, x, (params["layers"], caches["layers"]))
+            caches = {"layers": lc}
+    else:
+        is_moe = cfg.n_experts > 0
+        new_head = []
+        for hp, hc in zip(params.get("head_layers", []),
+                          caches.get("head_layers", [])):
+            x, hc = _tf_block_decode(hp, cfg, rt, x, hc, index, is_moe=False)
+            new_head.append(hc)
+
+        def body(h, xs):
+            lp, lc = xs
+            h, lc = _tf_block_decode(lp, cfg, rt, h, lc, index, is_moe=is_moe)
+            return h, lc
+
+        x, lc = jax.lax.scan(body, x, (params["layers"], caches["layers"]))
+        caches = {"layers": lc}
+        if new_head:
+            caches["head_layers"] = new_head
+
+    logits = _head(params, cfg, rt, x)
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Partition specs (GSPMD sharding rules)
+# ---------------------------------------------------------------------------
+
+
+def param_partition_specs(cfg: ModelConfig, rt: Runtime, params_shape) -> Any:
+    """PartitionSpec pytree matching params (or eval_shape of params)."""
+    if rt.mesh is None:
+        return jax.tree.map(lambda _: P(), params_shape)
+    if rt.strategy == "dp":
+        # pure ZeRO-3: every tensor fully sharded over (data x model) on its
+        # largest divisible dim; gathered just-in-time per layer by GSPMD.
+        # (pods replicate params; gradients all-reduce over DCN.)
+        combo = tuple(a for a in ("data", rt.model_axis)
+                      if a in rt.mesh.shape)
+        csize = math.prod(rt.mesh.shape[a] for a in combo)
+
+        def dp_rule(path, leaf):
+            shape = leaf.shape
+            for i in sorted(range(len(shape)), key=lambda i: -shape[i]):
+                if shape[i] % csize == 0:
+                    entries: list = [None] * len(shape)
+                    entries[i] = combo
+                    return P(*entries)
+            return P(*([None] * len(shape)))
+
+        return jax.tree_util.tree_map_with_path(dp_rule, params_shape)
+    M = rt.model_axis
+    msize = rt.mesh.shape[M]
+    fsdp_axis = "data" if (rt.fsdp and "data" in rt.mesh.shape) else None
+
+    def div(n):
+        return n % msize == 0
+
+    heads_ok = cfg.n_heads and div(cfg.n_heads)
+    pv = padded_vocab(cfg)
+
+    def rule(path, leaf) -> P:
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        names = [n for n in names if isinstance(n, str)]
+        name = ".".join(names)
+        shape = leaf.shape
+        rank = len(shape)
+
+        def spec(*entries):
+            # pad leading stacking dims (layers/groups) with None
+            pad = rank - len(entries)
+            return P(*((None,) * pad + entries))
+
+        def fs(n, axis_len):
+            """fsdp axis if divisible, else None."""
+            if fsdp_axis and axis_len % rt.mesh.shape[fsdp_axis] == 0:
+                return fsdp_axis
+            return None
+
+        if "embed" in names:
+            return spec(M if div(pv) else None, fs("d", cfg.d_model))
+        if "lm_head" in names:
+            return spec(fs("d", cfg.d_model), M if div(pv) else None)
+        if "router" in names:
+            return spec(None, M if div(cfg.n_experts) else None)
+        if "experts" in names:
+            e_spec = M if div(cfg.n_experts) else None
+            if name.endswith("down"):  # (E, f, d)
+                return spec(e_spec, fs("f", shape[-2]), None)
+            return spec(e_spec, fs("d", shape[-2]), None)  # (E, d, f)
+        if "attn" in names:
+            if cfg.attn_kind == "mla":
+                if "q_up" in names or "kv_up" in names:
+                    return spec(None, M if heads_ok else None)
+                if "out" in names:
+                    return spec(M if heads_ok else None, None)
+                return spec(*([None] * min(rank, 2)))
+            if any(k in names for k in ("q", "k", "v")) and "kernel" in names:
+                proj_heads = cfg.n_heads if "q" in names else cfg.n_kv_heads
+                return spec(fs("d", cfg.d_model),
+                            M if div(proj_heads) else None)
+            if "out" in names:
+                return spec(M if heads_ok else None, fs("d", cfg.d_model))
+        if "mixer" in names:
+            if "in_proj" in names:
+                return spec(fs("d", cfg.d_model), M if div(shape[-1]) else None)
+            if "conv" in names:
+                return spec(None, M if div(shape[-1]) else None)
+            if "out_proj" in names:
+                return spec(M if div(shape[-2]) else None, fs("d", cfg.d_model))
+            if names[-1] in ("A_log", "D", "dt_bias"):
+                return spec(M if div(shape[-1]) else None)
+            if "norm" in names:
+                return spec(M if div(shape[-1]) else None)
+        if "ffn" in names or "shared" in names:
+            if "down" in names:
+                return spec(M if div(shape[-2]) else None, fs("d", shape[-1]))
+            if names[-1] == "kernel":  # up / gate
+                return spec(fs("d", shape[-2]), M if div(shape[-1]) else None)
+        # norms and anything small: replicated
+        return spec(*([None] * min(rank, 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def cache_partition_specs(cfg: ModelConfig, rt: Runtime, caches_shape,
+                          batch: int) -> Any:
+    if rt.mesh is None:
+        return jax.tree.map(lambda _: P(), caches_shape)
+    M = rt.model_axis
+    bspec = rt.batch_spec(batch)
+    kv_ok = cfg.n_kv_heads and rt.model_divides(cfg.n_kv_heads)
+    nh_ok = cfg.ssm_state and rt.model_divides(cfg.ssm_nheads)
+
+    def rule(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        names = [n for n in names if isinstance(n, str)]
+        shape = leaf.shape
+        rank = len(shape)
+
+        def spec(*entries):
+            pad = rank - len(entries)
+            return P(*((None,) * pad + entries))
+
+        if "state" in names:  # (B, nh, hd, st)
+            return spec(bspec, M if nh_ok else None, None, None)
+        if "conv" in names:  # (B, K-1, conv_dim)
+            cd = shape[-1]
+            return spec(bspec, None, M if rt.model_divides(cd) else None)
+        if "c_kv" in names or "k_rope" in names:  # (B, S, r) — shard S
+            return spec(bspec, M if rt.model_divides(shape[-2]) else None, None)
+        if "pos" in names:  # (slots,)
+            return spec(None)
+        if names and names[-1] in ("k", "v"):  # (B, S, KV, hd)
+            if kv_ok:
+                return spec(bspec, None, M, None)
+            return spec(bspec, M if rt.model_divides(shape[-3]) else None, None, None)
+        return spec(*([None] * rank))
+
+    return jax.tree_util.tree_map_with_path(rule, caches_shape)

@@ -1,0 +1,200 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked algorithm + decode step.
+
+Faithful to arXiv:2405.21060: per-head scalar A, per-token dt (softplus), B/C
+shared across heads within a group (ngroups=1), depthwise causal conv over
+(x, B, C), gated RMSNorm, D skip. The chunked form computes intra-chunk terms
+as a masked quadratic attention-form and carries inter-chunk state with an
+associative scan — O(S * chunk) memory, O(1)/token decode state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import fanin_init, rms_norm_gated
+
+
+def init_ssm(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    d, di, ng, st, nh = (cfg.d_model, cfg.d_inner, cfg.ssm_ngroups,
+                         cfg.ssm_state, cfg.ssm_nheads)
+    conv_dim = di + 2 * ng * st
+    # A in [1, 16) as in the reference implementation
+    a_init = jnp.log(1.0 + 15.0 * jax.random.uniform(ks[2], (nh,)))
+    # dt bias: inverse-softplus of dt ~ U[1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[3], (nh,)) * (math.log(0.1) - math.log(1e-3))
+                 + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": {"kernel": fanin_init(ks[0], (d, 2 * di + 2 * ng * st + nh))},
+        "conv": {"kernel": 0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim))},
+        "A_log": a_init,
+        "D": jnp.ones((nh,)),
+        "dt_bias": dt_bias,
+        "norm": {"scale": jnp.ones((di,))},
+        "out_proj": {"kernel": fanin_init(jax.random.fold_in(key, 7), (di, d))},
+    }
+
+
+def _causal_conv(x: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal 1D conv. x: (B, S, C); kernel: (K, C)."""
+    K = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # windowed sum: sum_k kernel[k] * x[t - K + 1 + k]
+    out = jnp.zeros_like(x)
+    for k in range(K):  # K is small (4): unrolled adds fuse into one pass
+        out = out + xp[:, k: k + x.shape[1], :] * kernel[k].astype(x.dtype)
+    return out
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    di, ng, st, nh = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = proj[..., :di]
+    xBC = proj[..., di: 2 * di + 2 * ng * st]
+    dt = proj[..., 2 * di + 2 * ng * st:]
+    return z, xBC, dt
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular pairwise cumulative sums: out[..., t, s] = sum_{r=s+1..t} a[..., r].
+
+    a: (..., L). Returns (..., L, L) with NEG on the strict upper triangle.
+    """
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{r=s+1..t} for t >= s
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(params, cfg: ModelConfig, x,
+                initial_state: Optional[jnp.ndarray] = None,
+                return_state: bool = False):
+    """x: (B, S, d_model). Returns y (B, S, d_model) [, final_state]."""
+    B, S, _ = x.shape
+    di, ng, st, nh, hd = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                          cfg.ssm_nheads, cfg.ssm_headdim)
+    L = min(cfg.ssm_chunk, S)
+    assert S % L == 0, f"seq {S} must divide chunk {L}"
+    nc = S // L
+
+    proj = x @ params["in_proj"]["kernel"].astype(x.dtype)
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv"]["kernel"]))
+    xs = xBC[..., :di].reshape(B, nc, L, nh, hd)
+    Bm = xBC[..., di: di + ng * st].reshape(B, nc, L, ng, st)
+    Cm = xBC[..., di + ng * st:].reshape(B, nc, L, ng, st)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (nh,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    dt = dt.reshape(B, nc, L, nh)
+    a = dt * A  # log-decay per step, (B,nc,L,nh) <= 0
+
+    # ---- intra-chunk (attention-form) ----
+    cb = jnp.einsum("bclgn,bcsgn->bcgls", Cm, Bm,
+                    preferred_element_type=jnp.float32)  # (B,nc,g,L,L)
+    Lmat = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))  # (B,nc,nh,L,L)
+    hpg = nh // ng  # heads per group
+    w = cb.repeat(hpg, axis=2) * Lmat * dt.transpose(0, 1, 3, 2)[..., None, :]
+    y = jnp.einsum("bchls,bcshp->bclhp", w.astype(x.dtype), xs,
+                   preferred_element_type=jnp.float32)
+
+    # ---- chunk states ----
+    cums = jnp.cumsum(a, axis=2)  # (B,nc,L,nh)
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)  # (B,nc,L,nh)
+    dtx = (dt * decay_to_end)[..., None] * xs.astype(jnp.float32)  # (B,nc,L,nh,hd)
+    if ng == 1:
+        states = jnp.einsum("bcln,bclhp->bchpn", Bm[..., 0, :].astype(jnp.float32), dtx)
+    else:
+        Bh = jnp.repeat(Bm.astype(jnp.float32), hpg, axis=3)  # (B,nc,L,nh,st)
+        states = jnp.einsum("bclhn,bclhp->bchpn", Bh, dtx)
+
+    # ---- inter-chunk recurrence (associative scan over chunks) ----
+    chunk_decay = jnp.exp(cums[:, :, -1, :])  # (B,nc,nh)
+
+    def op(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    if initial_state is not None:
+        init = initial_state.astype(jnp.float32)[:, None]  # (B,1,nh,hd,st)
+        states = jnp.concatenate([init, states], axis=1)
+        chunk_decay = jnp.concatenate(
+            [jnp.ones_like(chunk_decay[:, :1]), chunk_decay], axis=1)
+        run_decay, run_state = jax.lax.associative_scan(op, (chunk_decay, states), axis=1)
+        prev_states = run_state[:, :-1]  # state entering each original chunk
+        final_state = run_state[:, -1]
+    else:
+        run_decay, run_state = jax.lax.associative_scan(op, (chunk_decay, states), axis=1)
+        prev_states = jnp.concatenate(
+            [jnp.zeros_like(run_state[:, :1]), run_state[:, :-1]], axis=1)
+        final_state = run_state[:, -1]
+
+    # ---- inter-chunk contribution ----
+    decay_in = jnp.exp(cums)  # decay from chunk start to t (B,nc,L,nh)
+    if ng == 1:
+        y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                             Cm[..., 0, :].astype(jnp.float32), prev_states, decay_in)
+    else:
+        Ch = jnp.repeat(Cm.astype(jnp.float32), hpg, axis=3)
+        y_inter = jnp.einsum("bclhn,bchpn,bclh->bclhp", Ch, prev_states, decay_in)
+
+    y = (y + y_inter).astype(x.dtype)
+    y = y + params["D"].astype(x.dtype)[:, None] * xs
+    y = y.reshape(B, S, di)
+    y = rms_norm_gated(params["norm"]["scale"], y, z)
+    out = y @ params["out_proj"]["kernel"].astype(x.dtype)
+    if return_state:
+        return out, final_state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, ng, st = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = di + 2 * ng * st
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim, st), jnp.float32),
+    }
+
+
+def ssd_decode(params, cfg: ModelConfig, x, cache):
+    """x: (B, 1, d_model). O(1)/token state update."""
+    B = x.shape[0]
+    di, ng, st, nh, hd = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                          cfg.ssm_nheads, cfg.ssm_headdim)
+    proj = x @ params["in_proj"]["kernel"].astype(x.dtype)
+    z, xBC, dt = _split_proj(cfg, proj)  # (B,1,·)
+    conv_in = jnp.concatenate([cache["conv"].astype(x.dtype), xBC], axis=1)  # (B,K,·)
+    kernel = params["conv"]["kernel"].astype(x.dtype)
+    xBC_t = jnp.einsum("bkc,kc->bc", conv_in, kernel)[:, None, :]
+    xBC_t = jax.nn.silu(xBC_t)
+    new_conv = conv_in[:, 1:, :]
+
+    xt = xBC_t[..., :di].reshape(B, nh, hd)
+    Bt = xBC_t[..., di: di + ng * st].reshape(B, ng, st)
+    Ct = xBC_t[..., di + ng * st:].reshape(B, ng, st)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dtt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+
+    decay = jnp.exp(dtt * A)  # (B,nh)
+    hpg = nh // ng
+    Bh = jnp.repeat(Bt.astype(jnp.float32), hpg, axis=1)  # (B,nh,st)
+    Ch = jnp.repeat(Ct.astype(jnp.float32), hpg, axis=1)
+    inject = (dtt[..., None] * xt.astype(jnp.float32))[..., None] * Bh[:, :, None, :]
+    state = cache["state"] * decay[..., None, None] + inject  # (B,nh,hd,st)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch).astype(x.dtype)
+    y = y + params["D"].astype(x.dtype)[:, None] * xt
+    y = y.reshape(B, 1, di)
+    y = rms_norm_gated(params["norm"]["scale"], y, z)
+    out = y @ params["out_proj"]["kernel"].astype(x.dtype)
+    return out, {"conv": new_conv.astype(cache["conv"].dtype), "state": state}

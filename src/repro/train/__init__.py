@@ -1,0 +1,3 @@
+from repro.train.step import TrainState, make_train_step, init_train_state  # noqa: F401
+from repro.train.checkpoint import (CheckpointManager, save_checkpoint,  # noqa: F401
+                                    restore_checkpoint, latest_step)

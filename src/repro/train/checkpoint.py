@@ -1,0 +1,149 @@
+"""Sharding-aware checkpointing with atomic writes, retention, async save,
+auto-resume and ELASTIC restore (mesh shape may change between save/restore).
+
+Layout:  <dir>/step_<n>/
+            manifest.json        tree structure + shapes + dtypes + meta
+            leaf_<i>.npy         one file per leaf (host-local full arrays)
+         <dir>/step_<n>.tmp...   staging dir, renamed atomically on success
+
+On restore, arrays are device_put against the *current* mesh's shardings —
+a 16x16 checkpoint restores onto 2x16x16 (or 1 CPU device) unchanged, which
+is the elastic-scaling path: save on N chips, resume on M.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _tree_paths(tree) -> List[str]:
+    paths = []
+    for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(kp))
+    return paths
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state, meta: Optional[Dict] = None,
+                    keep: int = 3) -> str:
+    """Atomic synchronous save. `state` is any pytree of arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "paths": _tree_paths(state),
+        "shapes": [list(np.shape(l)) for l in leaves],
+        "dtypes": [str(np.asarray(jax.device_get(l)).dtype) if hasattr(l, "dtype")
+                   else "float32" for l in leaves],
+        "meta": meta or {},
+    }
+    for i, leaf in enumerate(leaves):
+        np.save(os.path.join(tmp, f"leaf_{i}.npy"),
+                np.asarray(jax.device_get(leaf)))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    _apply_retention(ckpt_dir, keep)
+    return final
+
+
+def _apply_retention(ckpt_dir: str, keep: int) -> None:
+    steps = all_steps(ckpt_dir)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):
+    """Restore into the structure of `like`; if `shardings` (a matching pytree
+    of jax.sharding.Sharding) is given, device_put each leaf against it —
+    this is where elastic resharding happens."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(leaves) != manifest["n_leaves"]:
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, expected "
+            f"{len(leaves)} — structure changed between save and restore")
+    loaded = [np.load(os.path.join(path, f"leaf_{i}.npy"))
+              for i in range(len(leaves))]
+    for arr, ref in zip(loaded, leaves):
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"shape mismatch: {arr.shape} vs {np.shape(ref)}")
+    restored = jax.tree_util.tree_unflatten(treedef, loaded)
+    if shardings is not None:
+        restored = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), restored, shardings)
+    else:
+        restored = jax.tree.map(jnp.asarray, restored)
+    return restored, manifest["meta"]
+
+
+class CheckpointManager:
+    """Async (background-thread) checkpointing with auto-resume support.
+
+    save() snapshots to host memory synchronously (cheap) and writes to disk
+    in the background — training never blocks on the filesystem; wait() joins
+    before exit or before the next save (bounded staleness of 1).
+    """
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._executor = cf.ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[cf.Future] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save(self, step: int, state, meta: Optional[Dict] = None) -> None:
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        self._pending = self._executor.submit(
+            save_checkpoint, self.ckpt_dir, step, host_state, meta, self.keep)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def restore_latest(self, like, shardings=None):
+        """Returns (state, meta, step) or (None, None, None) when empty."""
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return None, None, None
+        state, meta = restore_checkpoint(self.ckpt_dir, step, like, shardings)
+        return state, meta, step
+
+    def close(self) -> None:
+        self.wait()
+        self._executor.shutdown(wait=True)

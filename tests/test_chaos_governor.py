@@ -1,0 +1,73 @@
+"""Fault injection schedules + governance policies."""
+import numpy as np
+import pytest
+
+from repro.core.chaos import Fault, FaultInjector
+from repro.core.collector import Collector
+from repro.core.detector import DetectionResult
+from repro.core.events import Layer
+from repro.core.governor import Governor
+
+
+def test_random_schedule_hits_target_fraction():
+    inj = FaultInjector.random_schedule(600, ["op_latency"], seed=1,
+                                        anomaly_fraction=1 / 6)
+    y = inj.labels(600)
+    assert 0.08 <= y.mean() <= 0.25  # ~5:1 ratio like the paper's dataset
+
+
+def test_injector_sets_and_clears_probe_hooks():
+    col = Collector.standard(with_python=False)
+    inj = FaultInjector([
+        Fault("op_latency", 2, 4, 0.5),
+        Fault("xla_latency", 2, 4, 0.3),
+        Fault("python_latency", 2, 4, 0.01),
+        Fault("net_latency", 2, 4, 3.0),
+        Fault("hw_contention", 2, 4, 0.7),
+        Fault("packet_loss", 3, 4, 0.2),
+    ])
+    assert inj.apply(0, col) == []
+    active = inj.apply(2, col)
+    assert len(active) == 5
+    # magnitudes carry heavy-tailed per-step jitter: check bands, not values
+    assert 0.05 < col["step"].extra_op < 5.0
+    assert 0.03 < col["step"].extra_xla < 3.0
+    assert 0.001 < col["step"].extra_latency < 0.1
+    assert col["collective"].comm_scale > 1.0
+    assert 0.0 < col["device"].devices[0].contention <= 1.0
+    active = inj.apply(3, col)
+    assert 0.0 < col["collective"].drop_prob <= 0.9
+    inj.clear(col)
+    assert col["step"].extra_latency == 0.0
+    assert col["step"].extra_op == 0.0
+    assert col["step"].extra_xla == 0.0
+    assert col["collective"].comm_scale == 1.0
+    assert col["device"].devices[0].contention == 0.0
+
+
+def test_governor_policies_fire_by_layer():
+    gov = Governor(rate_threshold=0.2, min_events=4)
+    res = {
+        Layer.STEP: DetectionResult(Layer.STEP, np.array([1, 1, 1, 0], bool),
+                                    np.zeros(4), -5.0,
+                                    np.array([1, 2, 3, 4])),
+        Layer.COLLECTIVE: DetectionResult(Layer.COLLECTIVE,
+                                          np.zeros(8, bool), np.zeros(8),
+                                          -5.0, np.arange(8)),
+    }
+    actions = gov.decide(res)
+    kinds = {a.kind for a in actions}
+    assert "checkpoint_now" in kinds  # step-layer straggler policy
+    assert len(actions) == 1  # collective layer below threshold
+
+
+def test_governor_severity_ordering():
+    gov = Governor(rate_threshold=0.1, min_events=2)
+    mk = lambda layer, rate: DetectionResult(
+        layer, np.random.rand(10) < rate, np.zeros(10), -5.0, np.arange(10))
+    np.random.seed(0)
+    res = {Layer.DEVICE: mk(Layer.DEVICE, 0.9),
+           Layer.PYTHON: mk(Layer.PYTHON, 0.3)}
+    actions = gov.decide(res)
+    assert len(actions) == 2
+    assert actions[0].severity >= actions[1].severity
