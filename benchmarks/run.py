@@ -19,7 +19,7 @@ def main() -> None:
                     help="shorter sessions (CI-speed)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig2,fig3,fig4,table1,"
-                         "table2,fig5,kernels")
+                         "table2,fig5,stream,kernels")
     args = ap.parse_args()
     n = 120 if args.quick else 300
     only = set(args.only.split(",")) if args.only else None
@@ -74,6 +74,13 @@ def main() -> None:
         accs = [m["accuracy"] for m in k_sweep.values()]
         record("fig5_sensitivity", time.time() - t0,
                f"acc_range={100*min(accs):.1f}-{100*max(accs):.1f}")
+    if want("stream"):
+        from benchmarks import stream_bench
+        t0 = time.time()
+        out = stream_bench.run(n_steps=120 if args.quick else 300)
+        record("stream_bench", time.time() - t0,
+               f"ingest={out['ingest_events_per_s']:.2e}ev/s "
+               f"detect={out['detect_ms_per_window']:.1f}ms")
     if want("kernels"):
         from benchmarks import kernel_bench
         t0 = time.time()

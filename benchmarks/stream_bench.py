@@ -1,0 +1,120 @@
+"""Streaming monitor benchmark: wire + ingest throughput (events/s) and
+per-window detection latency.
+
+    PYTHONPATH=src python -m benchmarks.stream_bench
+
+Three stages, each timed separately:
+
+* ``wire``    — encode+decode round trip of node batches (the per-node agent
+                and aggregator ends of the transport)
+* ``ingest``  — FleetAggregator.ingest of pre-encoded batches into the
+                per-layer sliding windows (the service hot path)
+* ``detect``  — OnlineGMMDetector.detect per window tick, after warmup
+                (steady-state: compiled shapes are reused, EM is warm-started)
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.core.events import Event, Layer
+from repro.stream import wire
+from repro.stream.online import OnlineGMMDetector
+from repro.stream.window import FleetAggregator
+
+
+def synth_events(n_steps: int, node_seed: int, t0: float = 0.0,
+                 ops_per_step: int = 6) -> List[Event]:
+    """A plausible per-node event stream: operator+step+device layers."""
+    rng = np.random.default_rng(node_seed)
+    base_dur = rng.uniform(2e-4, 2e-3, ops_per_step)
+    evs: List[Event] = []
+    for s in range(n_steps):
+        t = t0 + 0.02 * s
+        for j in range(ops_per_step):
+            evs.append(Event(layer=Layer.OPERATOR, name=f"op{j}",
+                             ts=t + 1e-4 * j,
+                             dur=float(base_dur[j] * rng.lognormal(0, 0.1)),
+                             size=float(1e5 * (j + 1)), step=s))
+        evs.append(Event(layer=Layer.STEP, name="train_step", ts=t,
+                         dur=float(5e-3 * rng.lognormal(0, 0.1)), step=s))
+        if s % 2 == 0:
+            evs.append(Event(layer=Layer.DEVICE, name="gpu0", ts=t, step=s,
+                             meta={"util": float(rng.uniform(0.6, 0.9)),
+                                   "mem_gb": 20.0,
+                                   "power_w": float(rng.uniform(250, 300)),
+                                   "temp_c": float(rng.uniform(55, 65))}))
+    return evs
+
+
+def run(n_steps: int = 300, n_nodes: int = 4, repeats: int = 5
+        ) -> Dict[str, object]:
+    # ---- build per-node batches ----
+    per_node = [synth_events(n_steps, node_seed=nid) for nid in range(n_nodes)]
+    n_events = sum(len(e) for e in per_node)
+
+    # ---- wire round trip ----
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        bufs = [wire.encode_events(evs, node_id=nid, seq=0)
+                for nid, evs in enumerate(per_node)]
+        for b in bufs:
+            wire.decode(b)
+    wire_s = (time.perf_counter() - t0) / repeats
+    wire_bytes = sum(len(b) for b in bufs)
+
+    # ---- aggregator ingest ----
+    ingest_s = []
+    for _ in range(repeats):
+        agg = FleetAggregator(capacity_per_layer=max(65536, n_events),
+                              horizon_s=1e9)
+        t0 = time.perf_counter()
+        for b in bufs:
+            agg.ingest(b)
+        agg.evict()
+        ingest_s.append(time.perf_counter() - t0)
+    ingest_s = float(np.median(ingest_s))
+
+    # ---- per-window detection latency (steady state) ----
+    det = OnlineGMMDetector(n_components=3, min_events=64, seed=0)
+    det.warmup(agg)
+    lat = []
+    for r in range(repeats + 2):
+        # slide: ingest one more flush per node so the window changes
+        for nid in range(n_nodes):
+            extra = synth_events(20, node_seed=100 + r * n_nodes + nid,
+                                 t0=0.02 * (n_steps + 20 * r))
+            agg.ingest(wire.encode_events(extra, node_id=nid, seq=1 + r))
+        t0 = time.perf_counter()
+        det.detect(agg)
+        lat.append(time.perf_counter() - t0)
+    detect_ms = float(np.median(lat[2:]) * 1e3)  # drop compile-warmup ticks
+
+    out = {
+        "n_events": n_events,
+        "n_nodes": n_nodes,
+        "wire_events_per_s": n_events / wire_s,
+        "wire_bytes_per_event": wire_bytes / n_events,
+        "ingest_events_per_s": n_events / ingest_s,
+        "detect_ms_per_window": detect_ms,
+        "window_sizes": {l.value: len(w) for l, w in agg.windows.items()
+                         if len(w)},
+    }
+    save_result("stream_bench", out)
+    return out
+
+
+def main() -> None:
+    out = run()
+    print(f"events:                {out['n_events']} over {out['n_nodes']} nodes")
+    print(f"wire round trip:       {out['wire_events_per_s']:,.0f} events/s "
+          f"({out['wire_bytes_per_event']:.0f} B/event)")
+    print(f"aggregator ingest:     {out['ingest_events_per_s']:,.0f} events/s")
+    print(f"detection latency:     {out['detect_ms_per_window']:.1f} ms/window")
+
+
+if __name__ == "__main__":
+    main()

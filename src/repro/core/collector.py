@@ -108,6 +108,7 @@ class Collector:
     def overhead_stats(self) -> Dict[str, Any]:
         return {
             "events": len(self.buffer),
+            "events_total": self.buffer.pushed,
             "dropped": self.buffer.dropped,
             "emitted_per_probe": {p.name: p.emitted for p in self.probes},
         }

@@ -51,11 +51,12 @@ class RingBuffer:
     """Bounded event buffer; overwrites oldest (like a BPF ring buffer)."""
 
     def __init__(self, capacity: int = 1_000_000):
-        self.capacity = capacity
-        self._buf: List[Optional[Event]] = [None] * capacity
+        self.capacity = max(1, int(capacity))  # capacity 0 would div-by-zero
+        self._buf: List[Optional[Event]] = [None] * self.capacity
         self._head = 0
         self._count = 0
         self._dropped = 0
+        self._pushed = 0
         self._lock = threading.Lock()
 
     def push(self, ev: Event) -> None:
@@ -65,6 +66,7 @@ class RingBuffer:
             self._buf[self._head] = ev
             self._head = (self._head + 1) % self.capacity
             self._count = min(self._count + 1, self.capacity)
+            self._pushed += 1
 
     def __len__(self) -> int:
         return self._count
@@ -72,6 +74,12 @@ class RingBuffer:
     @property
     def dropped(self) -> int:
         return self._dropped
+
+    @property
+    def pushed(self) -> int:
+        """Lifetime event count — survives drain() (streaming agents drain
+        the buffer continuously, so len() is not a throughput stat)."""
+        return self._pushed
 
     def drain(self) -> List[Event]:
         """Remove and return all events, oldest first."""
@@ -120,8 +128,30 @@ def export_perfetto(events: Iterable[Event], path: str) -> str:
     return path
 
 
+# Canonical column dtypes. String columns use object-free unicode; an empty
+# event list must still yield correctly-dtyped (0,)-shaped columns — the
+# stream wire format (repro.stream.wire) round-trips empty flushes through
+# this schema.
+EVENT_SCHEMA: Dict[str, np.dtype] = {
+    "layer": np.dtype("<U10"),
+    "name": np.dtype("<U64"),
+    "ts": np.dtype(np.float64),
+    "dur": np.dtype(np.float64),
+    "size": np.dtype(np.float64),
+    "step": np.dtype(np.int64),
+}
+
+
+def empty_arrays() -> Dict[str, np.ndarray]:
+    """Explicit empty-schema path: (0,) columns with the canonical dtypes
+    (``np.array([])`` would produce float64 for the string columns)."""
+    return {k: np.empty(0, dtype=dt) for k, dt in EVENT_SCHEMA.items()}
+
+
 def events_to_arrays(events: List[Event]) -> Dict[str, np.ndarray]:
     """Columnar view used by the feature builder."""
+    if not events:
+        return empty_arrays()
     return {
         "layer": np.array([e.layer.value for e in events]),
         "name": np.array([e.name for e in events]),

@@ -40,6 +40,23 @@ def _prec_chol_from_cov(cov: jnp.ndarray, reg: float) -> jnp.ndarray:
     return jnp.swapaxes(L_inv, -1, -2)  # U = L^-T, Sigma^-1 = U U^T
 
 
+def _init_params(X: jnp.ndarray, key: jnp.ndarray, K: int, reg: float,
+                 params0: Optional[GMMParams]) -> GMMParams:
+    """Shared EM init: validate + float32-cast a warm start, or draw the
+    cold init (random distinct points as means, shared data covariance)."""
+    if params0 is not None:
+        if params0.n_components != K:
+            raise ValueError(f"params0 has {params0.n_components} components, "
+                             f"expected {K}")
+        return GMMParams(*(jnp.asarray(p, jnp.float32) for p in params0))
+    N, D = X.shape
+    idx = jax.random.choice(key, N, (K,), replace=False)
+    means = X[idx]
+    data_cov = jnp.cov(X.T).reshape(D, D) + 1e-3 * jnp.eye(D)
+    prec = _prec_chol_from_cov(jnp.broadcast_to(data_cov, (K, D, D)), reg)
+    return GMMParams(jnp.full((K,), -jnp.log(K)), means, prec)
+
+
 def component_log_prob(X: jnp.ndarray, params: GMMParams) -> jnp.ndarray:
     """log N(x | mu_k, Sigma_k) for all k — the Definition-1 density.
 
@@ -57,18 +74,16 @@ def _logsumexp(a: jnp.ndarray, axis: int) -> jnp.ndarray:
 
 @functools.partial(jax.jit, static_argnames=("n_components", "n_iters"))
 def fit_gmm(X: jnp.ndarray, key: jnp.ndarray, *, n_components: int,
-            n_iters: int = 50, reg: float = 1e-6) -> Tuple[GMMParams, jnp.ndarray]:
-    """EM fit (Algorithm 1). X: (N, D) float32. Returns (params, ll_trace)."""
+            n_iters: int = 50, reg: float = 1e-6,
+            params0: Optional[GMMParams] = None) -> Tuple[GMMParams, jnp.ndarray]:
+    """EM fit (Algorithm 1). X: (N, D) float32. Returns (params, ll_trace).
+
+    ``params0`` warm-starts EM from an earlier fit instead of the random
+    init (previous-window refits in the streaming monitor)."""
     N, D = X.shape
     K = n_components
     X = X.astype(jnp.float32)
-
-    # ---- init: random distinct points as means, shared data covariance ----
-    idx = jax.random.choice(key, N, (K,), replace=False)
-    means0 = X[idx]
-    data_cov = jnp.cov(X.T).reshape(D, D) + 1e-3 * jnp.eye(D)
-    prec0 = _prec_chol_from_cov(jnp.broadcast_to(data_cov, (K, D, D)), reg)
-    params0 = GMMParams(jnp.full((K,), -jnp.log(K)), means0, prec0)
+    params0 = _init_params(X, key, K, reg, params0)
 
     def em_step(carry, _):
         params, _ = carry
@@ -162,23 +177,24 @@ class GMM:
 
 def fit_gmm_streaming(X, key, *, n_components: int, n_iters: int = 50,
                       reg: float = 1e-6, block_n: int = 4096,
-                      backend: str = "auto"):
+                      backend: str = "auto",
+                      params0: Optional[GMMParams] = None):
     """EM where each iteration is a single fused pass over X (kernels.gmm_stats).
 
     Mathematically identical to fit_gmm (same E/M updates); memory is O(K*D^2)
     instead of O(N*K). This is how the detector refits on >1M-event production
     windows (paper: "past hour" of events).
+
+    ``params0`` warm-starts EM from a previous window's fit (the streaming
+    monitor's per-window refit): a handful of iterations from yesterday's
+    optimum reaches the likelihood a cold fit needs tens of iterations for.
     """
     from repro.kernels import ops
 
     N, D = X.shape
     K = n_components
     X = jnp.asarray(X, jnp.float32)
-    idx = jax.random.choice(key, N, (K,), replace=False)
-    means = X[idx]
-    data_cov = jnp.cov(X.T).reshape(D, D) + 1e-3 * jnp.eye(D)
-    prec = _prec_chol_from_cov(jnp.broadcast_to(data_cov, (K, D, D)), reg)
-    log_w = jnp.full((K,), -jnp.log(K))
+    log_w, means, prec = _init_params(X, key, K, reg, params0)
     lls = []
     for _ in range(n_iters):
         nk, sx, sxx, ll = ops.gmm_stats(X, log_w, means, prec,

@@ -101,7 +101,12 @@ def _operands(line: str, op: str) -> List[str]:
     m = re.search(re.escape(op) + r"\(([^)]*)\)", line)
     if not m:
         return []
-    return [a.strip().lstrip("%") for a in m.group(1).split(",") if a.strip()]
+    group = m.group(1)
+    if "%" in group:
+        # typed operand lists — "dot(f32[64,64]{1,0} %a, f32[64,64]{1,0} %b)"
+        # — contain commas inside shapes; pick out the %-prefixed SSA names
+        return re.findall(r"%([\w\.\-]+)", group)
+    return [a.strip() for a in group.split(",") if a.strip()]
 
 
 def parse_hlo(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:

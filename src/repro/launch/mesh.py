@@ -7,21 +7,29 @@ XLA_FLAGS before any jax call).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+try:  # jax >= 0.5: explicit axis types (Auto == GSPMD propagation)
+    from jax.sharding import AxisType
+except ImportError:  # older jax: every axis is implicitly Auto
+    AxisType = None
+
+
+def _mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod (TPU v5e); multi-pod adds a leading DCN axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over host devices (tests / CPU runs)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _mesh((data, model), ("data", "model"))
 
 
 def describe(mesh) -> str:

@@ -29,7 +29,13 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--monitor", action="store_true")
+    ap.add_argument("--stream-monitor", action="store_true",
+                    help="streaming monitor: warmup generate, then online "
+                         "windowed detection + incident report "
+                         "(implies --monitor)")
     args = ap.parse_args(argv)
+    if args.stream_monitor:
+        args.monitor = True
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -43,7 +49,7 @@ def main(argv=None) -> int:
                          batch_size=args.batch, max_len=args.max_len,
                          temperature=args.temperature, seed=args.seed)
 
-    collector = None
+    collector = stream_mon = None
     if args.monitor:
         from repro.core import Collector
 
@@ -55,6 +61,20 @@ def main(argv=None) -> int:
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)
+
+    if args.stream_monitor:
+        from repro.stream import StreamMonitor
+
+        stream_mon = StreamMonitor(n_components=3, min_events=48,
+                                   seed=args.seed)
+        stream_mon.register_node(0, collector)
+        # calibration traffic: a short clean generate fits the per-layer
+        # baselines (decode steps are homogeneous — a small constant is
+        # enough; don't scale warmup with the requested generation length)
+        engine.generate(prompts, 24)
+        fitted = stream_mon.warmup()
+        print(f"[stream] warmed layers: {[l.value for l in fitted]}")
+
     t0 = time.time()
     out = engine.generate(prompts, args.tokens)
     dt = time.time() - t0
@@ -62,9 +82,15 @@ def main(argv=None) -> int:
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({total_tokens / dt:.1f} tok/s decode)")
     print("sample:", out[0, : args.prompt_len + 8].tolist())
+    if stream_mon is not None:
+        for inc in stream_mon.finish():
+            print("[stream] " + inc.render())
+        print("[stream] " + stream_mon.render_report())
     if collector is not None:
         stats = collector.overhead_stats()
-        print("[monitor] events:", stats["events"])
+        # events_total survives the streaming agent's drains; "events" is
+        # just what is still buffered
+        print("[monitor] events:", stats["events_total"])
         collector.detach()
     return 0
 

@@ -50,6 +50,11 @@ def main(argv=None) -> int:
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--monitor", action="store_true")
+    ap.add_argument("--stream-monitor", action="store_true",
+                    help="streaming fleet monitor: online windowed detection"
+                         " + incident reports (implies --monitor)")
+    ap.add_argument("--stream-flush-every", type=int, default=25,
+                    help="steps between agent flush / detection ticks")
     ap.add_argument("--inject-faults", action="store_true")
     ap.add_argument("--trace-out", default="")
     ap.add_argument("--log-every", type=int, default=10)
@@ -86,7 +91,9 @@ def main(argv=None) -> int:
             print(f"[resume] restored checkpoint at step {rstep}")
 
     # ---- monitoring (runtime attachment; user code unchanged) ----
-    collector = injector = governor = monitor = None
+    if args.stream_monitor:
+        args.monitor = True
+    collector = injector = governor = monitor = stream_mon = None
     raw_batch = data.batch(0)
     if args.monitor:
         from repro.core import Collector, FaultInjector, FullStackMonitor, Governor
@@ -112,6 +119,11 @@ def main(argv=None) -> int:
             injector = FaultInjector.random_schedule(
                 args.steps, ["op_latency", "net_latency", "hw_contention"],
                 seed=args.seed)
+        if args.stream_monitor:
+            from repro.stream import StreamMonitor
+
+            stream_mon = StreamMonitor(n_components=3, seed=args.seed)
+            stream_mon.register_node(0, collector)
 
     # ---- training loop ----
     losses = []
@@ -133,7 +145,23 @@ def main(argv=None) -> int:
         if ckpt is not None and step and step % args.checkpoint_every == 0:
             ckpt.save(step, state, meta={"loss": loss})
         # periodic anomaly sweep
-        if collector is not None and step and step % 50 == 0:
+        if stream_mon is not None:
+            # streaming path: agent flush -> windowed online GMM -> incidents
+            if step and step % args.stream_flush_every == 0:
+                if not stream_mon.detector.warmed:
+                    fitted = stream_mon.warmup()
+                    if fitted:
+                        print(f"[stream] warmed layers: "
+                              f"{[l.value for l in fitted]}")
+                else:
+                    for inc in stream_mon.tick():
+                        print("[stream] " + inc.render())
+                    for action in governor.decide(stream_mon.last_detections):
+                        print(f"[governor] {action.kind}: {action.reason}")
+                        if action.kind == "checkpoint_now" and ckpt is not None:
+                            ckpt.save(step, state, meta={"loss": loss,
+                                                         "reason": "governor"})
+        elif collector is not None and step and step % 50 == 0:
             events = collector.snapshot()
             train_events = [e for e in events if e.step < step - 25]
             if train_events:
@@ -149,9 +177,18 @@ def main(argv=None) -> int:
     if ckpt is not None:
         ckpt.save(args.steps - 1, state, meta={"loss": losses[-1]})
         ckpt.close()
+    if stream_mon is not None:
+        for inc in stream_mon.finish():
+            print("[stream] " + inc.render())
+        print("[stream] " + stream_mon.render_report())
     if collector is not None:
         if args.trace_out:
-            collector.export_trace(args.trace_out)
+            # under streaming the agent drains the ring buffer, so export
+            # from the aggregated windows instead of the (empty) collector
+            if stream_mon is not None:
+                stream_mon.export_trace(args.trace_out)
+            else:
+                collector.export_trace(args.trace_out)
             print(f"[monitor] perfetto trace -> {args.trace_out}")
         print("[monitor] overhead stats:", collector.overhead_stats())
         collector.detach()

@@ -1,0 +1,18 @@
+"""Streaming fleet monitor: online windowed detection, multi-node
+aggregation, and incident reports on top of the eACGM collector/probe stack.
+
+Public API:
+    StreamMonitor     — end-to-end orchestrator (agents -> windows ->
+                        online GMM -> incidents)
+    NodeAgent         — per-node ring-buffer flusher (wire producer)
+    FleetAggregator   — multi-node columnar sliding windows
+    OnlineGMMDetector — warm-started per-window EM + drift refit
+    IncidentEngine    — flag clustering / attribution / ranking
+    wire              — columnar Event-batch serialization
+"""
+from repro.stream import wire  # noqa: F401
+from repro.stream.agent import NodeAgent  # noqa: F401
+from repro.stream.incidents import Incident, IncidentEngine  # noqa: F401
+from repro.stream.monitor import StreamMonitor  # noqa: F401
+from repro.stream.online import OnlineGMMDetector, WindowDetection  # noqa: F401
+from repro.stream.window import FleetAggregator, LayerWindow  # noqa: F401

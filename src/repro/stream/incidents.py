@@ -1,0 +1,229 @@
+"""Incident engine: raw per-layer flags -> ranked cross-node incidents.
+
+A production fleet monitor cannot page an operator per flagged event — a
+single faulty NIC produces thousands of collective-layer flags across every
+node in the ring. The engine turns window detections into a small number of
+`Incident` records by
+
+1. pooling flagged rows from all layers/nodes,
+2. clustering them in time (flags separated by less than ``gap_s`` belong to
+   the same incident),
+3. attributing each cluster: the **suspect layer** is the non-symptom layer
+   with the largest total score deficit (the STEP layer flags for *every*
+   fault — it is the symptom, not the cause), the **suspect nodes** are the
+   nodes carrying the bulk of that layer's deficit,
+4. ranking by severity (total deficit, i.e. how far below delta the density
+   fell, summed over flags).
+
+Clusters are held open while new flags keep arriving and finalised once the
+stream has moved ``close_after_s`` past their last flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.events import Layer
+from repro.stream.online import WindowDetection
+
+# layers that aggregate the whole stack: never blamed while a specific layer
+# also carries deficit
+SYMPTOM_LAYERS = (Layer.STEP,)
+
+
+@dataclasses.dataclass
+class Incident:
+    incident_id: int
+    t_start: float
+    t_end: float
+    suspect_layer: Layer
+    suspect_nodes: List[int]
+    severity: float  # total score deficit across flags
+    n_flags: int
+    steps: List[int]  # anomalous step ids (union over layers)
+    layer_deficit: Dict[str, float]  # layer -> summed (delta - score)
+    node_flags: Dict[int, int]  # node -> flag count
+    status: str = "open"  # open | closed
+
+    def to_json(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["suspect_layer"] = self.suspect_layer.value
+        return d
+
+    def render(self) -> str:
+        nodes = ",".join(str(n) for n in self.suspect_nodes)
+        steps = _fmt_steps(self.steps)
+        layers = " ".join(f"{k}={v:.1f}" for k, v in sorted(
+            self.layer_deficit.items(), key=lambda kv: -kv[1]))
+        return (f"[incident #{self.incident_id} {self.status}] "
+                f"t={self.t_start:.2f}s..{self.t_end:.2f}s "
+                f"suspect={self.suspect_layer.value} node(s)={nodes} "
+                f"severity={self.severity:.1f} flags={self.n_flags} "
+                f"steps={steps}\n    layer deficit: {layers}")
+
+
+def _fmt_steps(steps: Sequence[int]) -> str:
+    if not steps:
+        return "-"
+    s = sorted(steps)
+    if len(s) > 8:
+        return f"{s[0]}..{s[-1]} ({len(s)} steps)"
+    return ",".join(str(x) for x in s)
+
+
+class IncidentEngine:
+    """Stateful flag clustering across detection ticks."""
+
+    def __init__(self, gap_s: float = 1.0, close_after_s: float = 2.0,
+                 min_flags: int = 8, deficit_cap: float = 1e3):
+        self.gap_s = float(gap_s)
+        self.close_after_s = float(close_after_s)
+        self.min_flags = int(min_flags)
+        # per-flag deficit cap: a near-constant feature (std floored at 1e-9
+        # in the standardizer) can push a single flag's (delta - score) to
+        # ~1e12, which would let one degenerate feature dominate cross-layer
+        # attribution and severity ranking
+        self.deficit_cap = float(deficit_cap)
+        self.incidents: List[Incident] = []  # finalised, ranked on report
+        self._next_id = 1
+        # pending flag rows: (ts, layer_idx, node, step, deficit)
+        self._pending: List[np.ndarray] = []
+        self._layers = tuple(Layer)
+        self._layer_idx = {l: i for i, l in enumerate(self._layers)}
+        # sliding windows re-score the same event every tick; the watermark
+        # admits each (layer, node) row into the incident stream exactly once
+        self._watermark: Dict[tuple, float] = {}
+        self._floor = -np.inf  # rows at or before this ts never enter
+        self._layer_floor: Dict[int, float] = {}  # per-layer late-fit floors
+
+    # -- ingestion ------------------------------------------------------------
+    def set_floor(self, ts: float) -> None:
+        """Exclude everything at or before ``ts`` from incident formation —
+        called after warmup so the reference window's own calibration false
+        positives (the contamination quantile flags ~c% of it by
+        construction) don't open a spurious incident."""
+        self._floor = float(ts)
+
+    def set_layer_floor(self, layer: Layer, ts: float) -> None:
+        """Same exclusion, for one layer — used when a layer is fitted late
+        (its training window would otherwise feed calibration flags straight
+        into an incident)."""
+        self._layer_floor[self._layer_idx[layer]] = float(ts)
+
+    def update(self, detections: Dict[Layer, WindowDetection],
+               now: Optional[float] = None) -> List[Incident]:
+        """Feed one tick's detections; returns incidents finalised by this
+        update (clusters whose last flag is > close_after_s old)."""
+        rows = []
+        t_max = now if now is not None else 0.0
+        for layer, det in detections.items():
+            if len(det.ts):
+                t_max = max(t_max, float(det.ts.max()))
+            fresh = np.zeros(len(det.ts), dtype=bool)
+            li = self._layer_idx[layer]
+            floor = max(self._floor, self._layer_floor.get(li, -np.inf))
+            for node in np.unique(det.nodes):
+                key = (li, int(node))
+                on_node = det.nodes == node
+                node_ts = det.ts[on_node]
+                wm = self._watermark.get(key, floor)
+                fresh[on_node] = node_ts > wm
+                self._watermark[key] = max(wm, float(node_ts.max()))
+            f = det.flags & fresh
+            if not f.any():
+                continue
+            deficit = np.clip(det.log_delta - det.scores[f], 0.0,
+                              self.deficit_cap)
+            rows.append(np.stack([
+                det.ts[f],
+                np.full(f.sum(), self._layer_idx[layer], dtype=np.float64),
+                det.nodes[f].astype(np.float64),
+                det.steps[f].astype(np.float64),
+                deficit,
+            ], axis=1))
+        if rows:
+            self._pending.append(np.concatenate(rows, axis=0))
+        return self._finalise(t_max)
+
+    def flush(self) -> List[Incident]:
+        """Force-finalise everything pending (end of run)."""
+        return self._finalise(float("inf"))
+
+    # -- clustering -----------------------------------------------------------
+    def _finalise(self, now: float) -> List[Incident]:
+        if not self._pending:
+            return []
+        rows = np.concatenate(self._pending, axis=0)
+        rows = rows[np.argsort(rows[:, 0], kind="stable")]
+        ts = rows[:, 0]
+        # split where the inter-flag gap exceeds gap_s
+        cuts = np.flatnonzero(np.diff(ts) > self.gap_s) + 1
+        groups = np.split(rows, cuts)
+        closed: List[Incident] = []
+        keep: List[np.ndarray] = []
+        for g in groups:
+            if now - g[-1, 0] <= self.close_after_s:
+                keep.append(g)  # still hot: may extend next tick
+                continue
+            inc = self._attribute(g)
+            if inc is not None:
+                closed.append(inc)
+        self._pending = keep
+        self.incidents.extend(closed)
+        return closed
+
+    def _attribute(self, g: np.ndarray) -> Optional[Incident]:
+        if g.shape[0] < self.min_flags:
+            return None
+        layer_ids = g[:, 1].astype(int)
+        deficits = g[:, 4]
+        layer_deficit: Dict[str, float] = {}
+        for li in np.unique(layer_ids):
+            layer_deficit[self._layers[li].value] = float(
+                deficits[layer_ids == li].sum())
+        # suspect layer: largest deficit among cause layers; symptom layers
+        # only when nothing specific flagged
+        cause = {k: v for k, v in layer_deficit.items()
+                 if Layer(k) not in SYMPTOM_LAYERS}
+        pool = cause or layer_deficit
+        suspect_layer = Layer(max(pool, key=pool.get))
+        # suspect nodes: nodes carrying >= 50% of the top node's deficit on
+        # the suspect layer
+        on_layer = layer_ids == self._layer_idx[suspect_layer]
+        node_def: Dict[int, float] = {}
+        for node in np.unique(g[on_layer, 2].astype(int)):
+            node_def[int(node)] = float(
+                deficits[on_layer & (g[:, 2] == node)].sum())
+        top = max(node_def.values())
+        suspects = sorted(n for n, d in node_def.items() if d >= 0.5 * top)
+        node_flags = {int(n): int((g[:, 2] == n).sum())
+                      for n in np.unique(g[:, 2].astype(int))}
+        steps = np.unique(g[:, 3].astype(int))
+        inc = Incident(
+            incident_id=self._next_id,
+            t_start=float(g[0, 0]), t_end=float(g[-1, 0]),
+            suspect_layer=suspect_layer, suspect_nodes=suspects,
+            severity=float(deficits.sum()), n_flags=int(g.shape[0]),
+            steps=[int(s) for s in steps if s >= 0],
+            layer_deficit=layer_deficit, node_flags=node_flags,
+            status="closed")
+        self._next_id += 1
+        return inc
+
+    # -- reporting ------------------------------------------------------------
+    def ranked(self) -> List[Incident]:
+        return sorted(self.incidents, key=lambda i: -i.severity)
+
+    def render_report(self) -> str:
+        incs = self.ranked()
+        if not incs:
+            return "no incidents"
+        lines = [f"{len(incs)} incident(s), ranked by severity:"]
+        lines += [i.render() for i in incs]
+        return "\n".join(lines)
+
+    def json_report(self) -> str:
+        return json.dumps([i.to_json() for i in self.ranked()], indent=1)

@@ -1,0 +1,292 @@
+"""Online windowed GMM detection over aggregator windows.
+
+`OnlineGMMDetector` is the streaming counterpart of `core.detector`'s
+batch `FullStackMonitor`:
+
+* features are computed **directly from the columnar windows** (vectorised;
+  no `Event` objects), with the same per-layer feature spaces as
+  `core.features.build_features`;
+* per-name duration baselines and the standardiser are fitted once on the
+  warmup window and then frozen (a detector must not re-derive its
+  normalisation from the window it scores);
+* each detection tick refits the GMM **warm-started from the previous
+  window's params** via `fit_gmm_streaming(params0=...)` — a few EM
+  iterations on the inlier rows track slow drift at a fraction of a cold
+  fit's cost;
+* a likelihood collapse on the *inlier* rows (beyond ``drift_tol`` nats)
+  signals concept drift and triggers a full cold refit + threshold
+  recalibration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.events import Layer
+from repro.core.gmm import (GMMParams, fit_gmm_streaming, score_samples,
+                            total_log_likelihood)
+from repro.stream.window import FleetAggregator, LayerWindow
+
+LATENCY_FEATURES = ("log_dur_us", "rel_dur", "log_bytes")
+COLLECTIVE_FEATURES = ("log_lat_us", "rel_dur", "log_bytes", "log_bw")
+DEVICE_FEATURES = ("util", "mem_gb", "power_w", "temp_c")
+
+
+@dataclasses.dataclass
+class WindowFeatures:
+    """One layer window, featurised."""
+
+    layer: Layer
+    X: np.ndarray  # (N, D)
+    steps: np.ndarray  # (N,) int64
+    nodes: np.ndarray  # (N,) int32
+    ts: np.ndarray  # (N,) float64
+    names: np.ndarray  # (N,) source event names
+
+
+@dataclasses.dataclass
+class WindowDetection:
+    """Per-layer flags for the current window (streaming DetectionResult)."""
+
+    layer: Layer
+    flags: np.ndarray  # (N,) bool
+    scores: np.ndarray  # (N,) best-component log density
+    log_delta: float
+    steps: np.ndarray
+    nodes: np.ndarray
+    ts: np.ndarray
+    refit: str = "warm"  # warm | cold (drift) | none
+
+    @property
+    def anomaly_rate(self) -> float:
+        return float(np.mean(self.flags)) if len(self.flags) else 0.0
+
+    def anomalous_steps(self) -> np.ndarray:
+        return np.unique(self.steps[self.flags & (self.steps >= 0)])
+
+
+@dataclasses.dataclass
+class _LayerState:
+    medians: Dict[str, float]
+    global_median: float
+    mean: np.ndarray
+    std: np.ndarray
+    params: GMMParams
+    log_delta: float
+    ll_fit: float  # mean total log-likelihood at fit time (drift reference)
+    n_components: int
+    cold_refits: int = 0
+    warm_refits: int = 0
+
+
+def _raw_features(layer: Layer, v: Dict[str, np.ndarray]
+                  ) -> Optional[WindowFeatures]:
+    """Window columns -> unbaselined feature matrix (rel_dur column zeroed;
+    the caller fills it from fitted per-name medians)."""
+    names = v["name"]
+    keep = ~np.char.startswith(names.astype(str), "static/")
+    if layer == Layer.DEVICE:
+        keep &= ~np.isnan(v["util"])
+        if not keep.any():
+            return None
+        X = np.stack([v[k][keep] for k in DEVICE_FEATURES], axis=1)
+    else:
+        if not keep.any():
+            return None
+        dur = v["dur"][keep]
+        size = v["size"][keep]
+        log_dur = np.log1p(dur * 1e6)
+        cols = [log_dur, np.zeros_like(log_dur), np.log1p(size)]
+        if layer == Layer.COLLECTIVE:
+            bw = np.where(dur > 0, size / np.maximum(dur, 1e-9), 0.0)
+            cols.append(np.log1p(bw))
+        X = np.stack(cols, axis=1)
+    return WindowFeatures(layer=layer, X=X, steps=v["step"][keep],
+                          nodes=v["node"][keep], ts=v["ts"][keep],
+                          names=names[keep])
+
+
+def _name_medians(names: np.ndarray, log_dur: np.ndarray
+                  ) -> Tuple[Dict[str, float], float]:
+    medians: Dict[str, float] = {}
+    for name in np.unique(names):
+        medians[str(name)] = float(np.median(log_dur[names == name]))
+    return medians, float(np.median(log_dur))
+
+
+def _apply_baseline(fs: WindowFeatures, medians: Dict[str, float],
+                    global_median: float) -> None:
+    """Fill rel_dur (column 1) = log_dur - fitted per-name median."""
+    uniq, inv = np.unique(fs.names, return_inverse=True)
+    base = np.array([medians.get(str(n), global_median) for n in uniq])[inv]
+    fs.X[:, 1] = fs.X[:, 0] - base
+
+
+class OnlineGMMDetector:
+    """One warm-started GMM per layer over the aggregator's sliding windows."""
+
+    LAYERS = tuple(Layer)
+
+    def __init__(self, n_components: int = 3, contamination: float = 0.02,
+                 refit_iters: int = 4, cold_iters: int = 40,
+                 drift_tol: float = 3.0, min_events: int = 64,
+                 reg: float = 1e-2, fit_rows: int = 2048, seed: int = 0):
+        self.n_components = n_components
+        self.contamination = contamination
+        self.refit_iters = refit_iters
+        self.cold_iters = cold_iters
+        self.drift_tol = drift_tol
+        self.min_events = min_events
+        self.reg = reg
+        # EM refits run on a fixed-size bootstrap of the window and scoring
+        # pads to power-of-two buckets: a sliding window changes N every
+        # tick, and XLA recompiles per shape — fixed/bucketed shapes turn
+        # per-tick recompilation (~0.5 s) into a one-time cost.
+        self.fit_rows = fit_rows
+        self.seed = seed
+        self.states: Dict[Layer, _LayerState] = {}
+        self._key = jax.random.PRNGKey(seed)
+        self._rng = np.random.default_rng(seed)
+
+    # -- helpers --------------------------------------------------------------
+    def _split_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _fit_sample(self, X: np.ndarray) -> np.ndarray:
+        """Exactly fit_rows rows: bootstrap up when short, subsample down
+        when long. EM sees one compiled shape for the detector's lifetime."""
+        n = X.shape[0]
+        if n == self.fit_rows:
+            return X
+        idx = self._rng.choice(n, self.fit_rows, replace=n < self.fit_rows)
+        return X[idx]
+
+    @staticmethod
+    def _score_bucketed(Xs: np.ndarray, params: GMMParams) -> np.ndarray:
+        """score_samples with N padded to the next power of two (>=256):
+        scores of the zero padding rows are computed and discarded."""
+        n = Xs.shape[0]
+        m = max(256, 1 << (n - 1).bit_length())
+        if m != n:
+            Xp = np.zeros((m, Xs.shape[1]), dtype=np.float32)
+            Xp[:n] = Xs
+        else:
+            Xp = Xs
+        return np.asarray(score_samples(Xp, params)[0])[:n]
+
+    def _featurize(self, window: LayerWindow,
+                   state: _LayerState) -> Optional[WindowFeatures]:
+        if len(window) == 0:
+            return None
+        fs = _raw_features(window.layer, window.view())
+        if fs is None:
+            return None
+        if window.layer != Layer.DEVICE:
+            _apply_baseline(fs, state.medians, state.global_median)
+        return fs
+
+    def _cold_fit(self, layer: Layer, fs: WindowFeatures) -> _LayerState:
+        if layer == Layer.DEVICE:
+            medians, gmed = {}, 0.0
+        else:
+            medians, gmed = _name_medians(fs.names, fs.X[:, 0])
+            _apply_baseline(fs, medians, gmed)
+        mean = fs.X.mean(0)
+        std = np.maximum(fs.X.std(0), 1e-9)
+        Xs = ((fs.X - mean) / std).astype(np.float32)
+        k = min(self.n_components, max(1, Xs.shape[0] // 32))
+        params, lls = fit_gmm_streaming(self._fit_sample(Xs),
+                                        self._split_key(), n_components=k,
+                                        n_iters=self.cold_iters, reg=self.reg)
+        scores = self._score_bucketed(Xs, params)
+        log_delta = float(np.quantile(scores, self.contamination))
+        return _LayerState(medians=medians, global_median=gmed, mean=mean,
+                           std=std, params=params, log_delta=log_delta,
+                           ll_fit=float(lls[-1]), n_components=k)
+
+    # -- lifecycle ------------------------------------------------------------
+    def warmup(self, agg: FleetAggregator) -> List[Layer]:
+        """Fit baselines + cold GMMs on the current (assumed-clean) windows
+        of every layer not yet modelled. Idempotent: call again on later
+        ticks so slow layers (device telemetry trickles in at its polling
+        interval) get fitted once they reach min_events instead of staying
+        unmonitored forever. Returns the newly fitted layers."""
+        fitted = []
+        for layer in self.LAYERS:
+            if layer in self.states:
+                continue
+            window = agg.window(layer)
+            if len(window) < self.min_events:
+                continue
+            fs = _raw_features(layer, window.view())
+            if fs is None or fs.X.shape[0] < self.min_events:
+                continue
+            self.states[layer] = self._cold_fit(layer, fs)
+            fitted.append(layer)
+        return fitted
+
+    @property
+    def warmed(self) -> bool:
+        return bool(self.states)
+
+    # -- per-window detection --------------------------------------------------
+    def detect(self, agg: FleetAggregator, refit: bool = True
+               ) -> Dict[Layer, WindowDetection]:
+        """Score every fitted layer's current window; then (optionally) track
+        the model: warm EM refit on the inlier rows, cold refit on drift."""
+        out: Dict[Layer, WindowDetection] = {}
+        for layer, state in self.states.items():
+            fs = self._featurize(agg.window(layer), state)
+            if fs is None or not len(fs.X):
+                continue
+            Xs = ((fs.X - state.mean) / state.std).astype(np.float32)
+            scores = self._score_bucketed(Xs, state.params)
+            flags = scores < state.log_delta
+            mode = "none"
+            if refit:
+                mode = self._track(layer, state, Xs, flags)
+            out[layer] = WindowDetection(
+                layer=layer, flags=flags, scores=scores,
+                log_delta=state.log_delta, steps=fs.steps, nodes=fs.nodes,
+                ts=fs.ts, refit=mode)
+        return out
+
+    def _track(self, layer: Layer, state: _LayerState, Xs: np.ndarray,
+               flags: np.ndarray) -> str:
+        """Model maintenance after scoring: warm-start EM on inliers; full
+        refit + threshold recalibration when the inlier likelihood collapses
+        (concept drift, not a transient anomaly burst)."""
+        inliers = Xs[~flags]
+        if inliers.shape[0] < max(8 * state.n_components, 16):
+            return "none"
+        inliers = self._fit_sample(inliers)
+        ll_now = float(total_log_likelihood(inliers, state.params))
+        if ll_now < state.ll_fit - self.drift_tol:
+            params, lls = fit_gmm_streaming(
+                inliers, self._split_key(), n_components=state.n_components,
+                n_iters=self.cold_iters, reg=self.reg)
+            scores = self._score_bucketed(inliers, params)
+            state.params = params
+            state.log_delta = float(np.quantile(scores, self.contamination))
+            state.ll_fit = float(lls[-1])
+            state.cold_refits += 1
+            return "cold"
+        params, lls = fit_gmm_streaming(
+            inliers, self._split_key(), n_components=state.n_components,
+            n_iters=self.refit_iters, reg=self.reg, params0=state.params)
+        state.params = params
+        state.ll_fit = float(lls[-1])
+        state.warm_refits += 1
+        return "warm"
+
+    def stats(self) -> Dict[str, object]:
+        return {layer.value: {"k": s.n_components,
+                              "log_delta": s.log_delta,
+                              "ll_fit": s.ll_fit,
+                              "warm_refits": s.warm_refits,
+                              "cold_refits": s.cold_refits}
+                for layer, s in self.states.items()}

@@ -1,0 +1,173 @@
+"""Per-layer sliding windows over preallocated numpy columns + the fleet
+aggregator that feeds them from node batches.
+
+The aggregator is the service-side state of the streaming monitor: one
+`LayerWindow` per monitored layer, each a fixed-capacity columnar store with
+time-horizon eviction. Ingest is vectorised end to end — a decoded wire batch
+is split into per-layer masks and block-copied into the window columns; no
+`Event` objects exist on the hot path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.events import Layer
+from repro.stream import wire
+
+# columns every window keeps (name dtype is fixed-width so the store is flat)
+_F64 = ("ts", "dur", "size") + wire.TELEMETRY_KEYS
+_NAME_DT = np.dtype("<U64")
+
+
+class LayerWindow:
+    """Fixed-capacity sliding window of one layer's events, columnar.
+
+    Rows live in preallocated arrays `[0, n)`; appends block-copy into the
+    tail, overflow and horizon eviction compact in place. Rows are kept in
+    arrival order (per-node batches are time-sorted; cross-node interleaving
+    is only approximately sorted, so eviction uses a mask, not a tail
+    pointer).
+    """
+
+    def __init__(self, layer: Layer, capacity: int = 65536,
+                 horizon_s: float = 60.0):
+        self.layer = layer
+        self.capacity = int(capacity)
+        self.horizon_s = float(horizon_s)
+        self.n = 0
+        self.evicted = 0  # rows dropped (horizon or overflow) over lifetime
+        self.cols: Dict[str, np.ndarray] = {
+            k: np.zeros(self.capacity, dtype=np.float64) for k in _F64}
+        self.cols["step"] = np.zeros(self.capacity, dtype=np.int64)
+        self.cols["node"] = np.zeros(self.capacity, dtype=np.int32)
+        self.cols["name"] = np.zeros(self.capacity, dtype=_NAME_DT)
+
+    def __len__(self) -> int:
+        return self.n
+
+    # -- mutation -------------------------------------------------------------
+    def append(self, cols: Dict[str, np.ndarray], node_id: int,
+               sel: Optional[np.ndarray] = None) -> int:
+        """Block-copy rows from a wire-format column dict (optionally the
+        subset selected by boolean mask ``sel``). Returns rows added."""
+
+        def pick(key: str) -> np.ndarray:
+            c = cols[key]
+            return c[sel] if sel is not None else c
+
+        ts = pick("ts")
+        n_add = int(ts.shape[0])
+        if n_add == 0:
+            return 0
+        if n_add > self.capacity:  # keep only the newest capacity rows
+            self.evicted += n_add - self.capacity
+            keep = np.argsort(ts, kind="stable")[n_add - self.capacity:]
+            sel = keep if sel is None else np.flatnonzero(sel)[keep]
+            ts = cols["ts"][sel]
+            n_add = self.capacity
+        if self.n + n_add > self.capacity:
+            self._make_room(self.n + n_add - self.capacity)
+        lo, hi = self.n, self.n + n_add
+        for k in _F64:
+            self.cols[k][lo:hi] = pick(k)
+        self.cols["step"][lo:hi] = pick("step")
+        self.cols["name"][lo:hi] = pick("name")
+        self.cols["node"][lo:hi] = node_id
+        self.n = hi
+        return n_add
+
+    def _make_room(self, n_drop: int) -> None:
+        """Drop the n_drop oldest rows (by ts) via in-place compaction."""
+        order = np.argsort(self.cols["ts"][:self.n], kind="stable")
+        keep = np.sort(order[n_drop:])
+        self._compact(keep)
+        self.evicted += n_drop
+
+    def evict_older_than(self, cutoff_ts: float) -> int:
+        """Horizon eviction: drop rows with ts < cutoff. Returns rows
+        dropped."""
+        if self.n == 0:
+            return 0
+        keep = np.flatnonzero(self.cols["ts"][:self.n] >= cutoff_ts)
+        dropped = self.n - keep.shape[0]
+        if dropped:
+            self._compact(keep)
+            self.evicted += dropped
+        return dropped
+
+    def _compact(self, keep: np.ndarray) -> None:
+        for k, col in self.cols.items():
+            col[:keep.shape[0]] = col[keep]
+        self.n = int(keep.shape[0])
+
+    # -- views ----------------------------------------------------------------
+    def view(self) -> Dict[str, np.ndarray]:
+        """Zero-copy views of the live rows (invalidated by mutation)."""
+        return {k: col[:self.n] for k, col in self.cols.items()}
+
+    @property
+    def t_newest(self) -> float:
+        return float(self.cols["ts"][:self.n].max()) if self.n else 0.0
+
+
+class FleetAggregator:
+    """Merges wire batches from N nodes into per-layer sliding windows."""
+
+    LAYERS = tuple(Layer)
+
+    def __init__(self, capacity_per_layer: int = 65536,
+                 horizon_s: float = 60.0):
+        self.horizon_s = float(horizon_s)
+        self.windows: Dict[Layer, LayerWindow] = {
+            layer: LayerWindow(layer, capacity_per_layer, horizon_s)
+            for layer in self.LAYERS}
+        self.nodes_seen: Dict[int, int] = {}  # node_id -> last seq
+        self.lost_batches = 0
+        self.events_ingested = 0
+        self.events_dropped_at_source = 0
+        self.t_latest = 0.0
+
+    def ingest(self, batch: Union[bytes, wire.EventBatch]) -> int:
+        """Merge one node flush; returns events added across layers."""
+        if isinstance(batch, (bytes, bytearray, memoryview)):
+            batch = wire.decode(bytes(batch))
+        last = self.nodes_seen.get(batch.node_id)
+        if last is not None and batch.seq > last + 1:
+            self.lost_batches += batch.seq - last - 1
+        self.nodes_seen[batch.node_id] = batch.seq
+        self.events_dropped_at_source += batch.dropped
+        cols = batch.columns
+        n = int(cols["ts"].shape[0])
+        if n == 0:
+            return 0
+        layer_codes = cols["layer"]
+        added = 0
+        for code, layer in enumerate(self.LAYERS):
+            sel = layer_codes == np.int8(code)
+            if not sel.any():
+                continue
+            added += self.windows[layer].append(cols, batch.node_id, sel=sel)
+        self.events_ingested += added
+        self.t_latest = max(self.t_latest, float(cols["ts"].max()))
+        return added
+
+    def evict(self, now: Optional[float] = None) -> int:
+        """Advance the horizon on every window; returns rows dropped."""
+        cutoff = (self.t_latest if now is None else now) - self.horizon_s
+        return sum(w.evict_older_than(cutoff) for w in self.windows.values())
+
+    def window(self, layer: Layer) -> LayerWindow:
+        return self.windows[layer]
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "nodes": len(self.nodes_seen),
+            "events_ingested": self.events_ingested,
+            "events_dropped_at_source": self.events_dropped_at_source,
+            "lost_batches": self.lost_batches,
+            "window_sizes": {l.value: len(w) for l, w in self.windows.items()
+                             if len(w)},
+            "t_latest": self.t_latest,
+        }

@@ -1,0 +1,191 @@
+"""Compact columnar wire format for event batches.
+
+Node agents ship drained ring-buffer contents to the fleet aggregator as
+*columns*, not objects: one contiguous buffer per field, preceded by a small
+JSON header. Encoding N events costs O(columns) numpy copies (no per-event
+Python work beyond the initial `events_to_arrays` columnarisation), and the
+receiver can ingest the columns straight into its preallocated sliding
+windows without ever materialising `Event` objects.
+
+Layout (little-endian):
+
+    MAGIC "EACS" | u16 version | u32 header_len | header JSON (utf-8)
+    | column 0 bytes | column 1 bytes | ...
+
+The header records node_id / seq / t_base / dropped plus, per column, the
+dtype string and shape needed to reinterpret the raw bytes. String columns
+travel as fixed-width unicode (``<U#``) — wasteful for long names but
+trivially seekable; event names in this system are short symbol names.
+
+Device-layer telemetry (util/mem_gb/power_w/temp_c, carried in ``Event.meta``)
+is lifted into four dedicated float64 columns at encode time so the aggregator
+never parses JSON per event; any *other* meta keys ride in an optional
+JSON-lines column that is empty for typical batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.events import Event, Layer, empty_arrays, events_to_arrays
+
+MAGIC = b"EACS"
+VERSION = 1
+
+# Layer enum <-> wire code (int8). Order is the Layer declaration order and
+# must stay append-only for cross-version compatibility.
+LAYERS = tuple(Layer)
+LAYER_CODE = {layer: np.int8(i) for i, layer in enumerate(LAYERS)}
+
+# meta keys promoted to dedicated columns (device telemetry hot path)
+TELEMETRY_KEYS = ("util", "mem_gb", "power_w", "temp_c")
+
+# wire columns in serialization order
+WIRE_COLUMNS = ("layer", "name", "ts", "dur", "size", "pid", "tid", "step",
+                "util", "mem_gb", "power_w", "temp_c", "meta")
+
+
+@dataclasses.dataclass
+class EventBatch:
+    """One flush from one node: columnar events + provenance."""
+
+    node_id: int
+    seq: int  # per-node flush counter (gaps => lost batches)
+    # provenance only: the node epoch offset the agent ALREADY added to the
+    # ts column before shipping (ts values arrive fleet-absolute; receivers
+    # must not re-apply t_base)
+    t_base: float
+    columns: Dict[str, np.ndarray]
+    dropped: int = 0  # ring-buffer overwrites since the previous flush
+
+    def __len__(self) -> int:
+        return int(self.columns["ts"].shape[0])
+
+    def nbytes(self) -> int:
+        return sum(int(c.nbytes) for c in self.columns.values())
+
+
+def events_to_columns(events: List[Event]) -> Dict[str, np.ndarray]:
+    """Extend the core columnar schema with wire-only columns: int8 layer
+    codes, pid/tid, telemetry columns, and a JSON column for residual meta."""
+    n = len(events)
+    if n == 0:
+        cols = {k: v for k, v in empty_arrays().items() if k != "layer"}
+        cols.update({
+            "layer": np.empty(0, dtype=np.int8),
+            "pid": np.empty(0, dtype=np.int64),
+            "tid": np.empty(0, dtype=np.int64),
+            "meta": np.empty(0, dtype="<U1"),
+        })
+        for k in TELEMETRY_KEYS:
+            cols[k] = np.empty(0, dtype=np.float64)
+        return cols
+    base = events_to_arrays(events)
+    cols: Dict[str, np.ndarray] = {
+        "layer": np.array([LAYER_CODE[e.layer] for e in events], dtype=np.int8),
+        "name": base["name"],
+        "ts": base["ts"],
+        "dur": base["dur"],
+        "size": base["size"],
+        "pid": np.array([e.pid for e in events], dtype=np.int64),
+        "tid": np.array([e.tid for e in events], dtype=np.int64),
+        "step": base["step"],
+    }
+    for k in TELEMETRY_KEYS:
+        cols[k] = np.array(
+            [float((e.meta or {}).get(k, np.nan)) for e in events],
+            dtype=np.float64)
+    residual: List[str] = []
+    for e in events:
+        extra = {k: v for k, v in (e.meta or {}).items()
+                 if k not in TELEMETRY_KEYS}
+        residual.append(json.dumps(extra, separators=(",", ":"),
+                                   default=str) if extra else "")
+    cols["meta"] = np.array(residual)
+    return cols
+
+
+def columns_to_events(cols: Dict[str, np.ndarray]) -> List[Event]:
+    """Inverse of events_to_columns (used by tests and trace export)."""
+    out: List[Event] = []
+    n = int(cols["ts"].shape[0])
+    for i in range(n):
+        meta: Optional[Dict[str, Any]] = None
+        telemetry = {k: float(cols[k][i]) for k in TELEMETRY_KEYS
+                     if not np.isnan(cols[k][i])}
+        if telemetry:
+            meta = telemetry
+        raw = str(cols["meta"][i])
+        if raw:
+            meta = dict(meta or {}, **json.loads(raw))
+        out.append(Event(
+            layer=LAYERS[int(cols["layer"][i])],
+            name=str(cols["name"][i]),
+            ts=float(cols["ts"][i]),
+            dur=float(cols["dur"][i]),
+            size=float(cols["size"][i]),
+            pid=int(cols["pid"][i]),
+            tid=int(cols["tid"][i]),
+            step=int(cols["step"][i]),
+            meta=meta,
+        ))
+    return out
+
+
+def encode(batch: EventBatch) -> bytes:
+    """EventBatch -> wire bytes."""
+    parts: List[bytes] = []
+    colspec = []
+    for name in WIRE_COLUMNS:
+        col = np.ascontiguousarray(batch.columns[name])
+        raw = col.tobytes()
+        colspec.append({"name": name, "dtype": col.dtype.str,
+                        "n": int(col.shape[0]), "nbytes": len(raw)})
+        parts.append(raw)
+    header = json.dumps({
+        "node_id": batch.node_id, "seq": batch.seq,
+        "t_base": batch.t_base, "dropped": batch.dropped,
+        "columns": colspec,
+    }, separators=(",", ":")).encode()
+    return b"".join([MAGIC, struct.pack("<HI", VERSION, len(header)), header]
+                    + parts)
+
+
+def decode(buf: bytes) -> EventBatch:
+    """Wire bytes -> EventBatch. Validates magic/version and column sizes."""
+    if buf[:4] != MAGIC:
+        raise ValueError(f"bad magic {buf[:4]!r}")
+    version, hlen = struct.unpack_from("<HI", buf, 4)
+    if version > VERSION:
+        raise ValueError(f"wire version {version} newer than supported "
+                         f"{VERSION}")
+    off = 10
+    header = json.loads(buf[off:off + hlen].decode())
+    off += hlen
+    columns: Dict[str, np.ndarray] = {}
+    for spec in header["columns"]:
+        nbytes = spec["nbytes"]
+        raw = buf[off:off + nbytes]
+        if len(raw) != nbytes:
+            raise ValueError(f"truncated column {spec['name']}: "
+                             f"{len(raw)}/{nbytes} bytes")
+        arr = np.frombuffer(raw, dtype=np.dtype(spec["dtype"]))
+        if arr.shape[0] != spec["n"]:
+            raise ValueError(f"column {spec['name']} length mismatch")
+        columns[spec["name"]] = arr
+        off += nbytes
+    return EventBatch(node_id=header["node_id"], seq=header["seq"],
+                      t_base=header["t_base"], dropped=header["dropped"],
+                      columns=columns)
+
+
+def encode_events(events: List[Event], *, node_id: int, seq: int,
+                  t_base: float = 0.0, dropped: int = 0) -> bytes:
+    """Convenience: Event list -> wire bytes in one call."""
+    return encode(EventBatch(node_id=node_id, seq=seq, t_base=t_base,
+                             columns=events_to_columns(events),
+                             dropped=dropped))

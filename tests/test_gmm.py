@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.gmm import (GMM, GMMParams, component_log_prob,
                             detect_anomalies, fit_gmm, score_samples,

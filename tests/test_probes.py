@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.collector import Collector
 from repro.core.events import Event, Layer, RingBuffer, to_chrome_trace
@@ -67,11 +67,12 @@ def test_hlo_collective_parsing_sharded_module():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from jax.sharding import PartitionSpec as P, NamedSharding
 import sys
 sys.path.insert(0, "src")
 from repro.core.probes.collective_probe import collective_bytes_by_op
-mesh = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+from repro.launch.mesh import make_local_mesh
+mesh = make_local_mesh(1, 4)
 def f(x, w):
     return (x @ w).sum()
 x = jax.ShapeDtypeStruct((64, 128), jnp.float32)

@@ -1,0 +1,228 @@
+"""Streaming fleet monitor: wire round trip, sliding-window eviction,
+warm-start EM, and incident grouping on a chaos-injected two-node trace."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.events import Event, Layer, events_to_arrays
+from repro.core.gmm import fit_gmm_streaming, total_log_likelihood
+from repro.stream import wire
+from repro.stream.incidents import IncidentEngine
+from repro.stream.online import OnlineGMMDetector
+from repro.stream.window import FleetAggregator, LayerWindow
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+
+def _sample_events():
+    evs = [Event(layer=Layer.OPERATOR, name=f"op{i % 3}", ts=0.01 * i,
+                 dur=1e-4 * (1 + i % 5), size=100.0 * i, step=i // 4,
+                 pid=1234, tid=2 ** 40 + i) for i in range(20)]
+    evs.append(Event(layer=Layer.DEVICE, name="gpu0", ts=0.5, step=5,
+                     meta={"util": 0.75, "mem_gb": 11.5, "power_w": 280.0,
+                           "temp_c": 61.0, "slot": "a3"}))
+    evs.append(Event(layer=Layer.COLLECTIVE, name="all-reduce", ts=0.6,
+                     dur=2e-3, size=1 << 20, step=6))
+    return evs
+
+
+def test_wire_round_trip():
+    evs = _sample_events()
+    buf = wire.encode_events(evs, node_id=3, seq=7, t_base=1.5, dropped=2)
+    batch = wire.decode(buf)
+    assert (batch.node_id, batch.seq, batch.dropped) == (3, 7, 2)
+    assert batch.t_base == 1.5
+    back = wire.columns_to_events(batch.columns)
+    assert len(back) == len(evs)
+    for a, b in zip(evs, back):
+        assert a.layer == b.layer and a.name == b.name
+        assert a.ts == b.ts and a.dur == b.dur and a.size == b.size
+        assert a.pid == b.pid and a.tid == b.tid and a.step == b.step
+    # meta survives: telemetry columns + residual JSON merged back
+    assert back[20].meta == evs[20].meta
+
+
+def test_wire_round_trip_empty():
+    batch = wire.decode(wire.encode_events([], node_id=0, seq=0))
+    assert len(batch) == 0
+    assert wire.columns_to_events(batch.columns) == []
+    # empty columns carry the canonical dtypes (satellite: empty-schema path)
+    assert batch.columns["ts"].dtype == np.float64
+    assert batch.columns["step"].dtype == np.int64
+    assert batch.columns["layer"].dtype == np.int8
+
+
+def test_wire_rejects_garbage():
+    with pytest.raises(ValueError):
+        wire.decode(b"NOPE" + b"\x00" * 32)
+
+
+def test_events_to_arrays_empty_schema():
+    cols = events_to_arrays([])
+    assert cols["ts"].dtype == np.float64
+    assert cols["step"].dtype == np.int64
+    assert cols["layer"].dtype.kind == "U"
+    assert cols["name"].dtype.kind == "U"
+    assert all(v.shape == (0,) for v in cols.values())
+
+
+# ---------------------------------------------------------------------------
+# sliding windows
+# ---------------------------------------------------------------------------
+
+def _op_events(n, t0=0.0, dt=0.1, node_seed=0):
+    return [Event(layer=Layer.OPERATOR, name="op", ts=t0 + dt * i, dur=1e-4,
+                  size=1.0, step=i) for i in range(n)]
+
+
+def test_window_horizon_eviction():
+    win = LayerWindow(Layer.OPERATOR, capacity=128, horizon_s=1.0)
+    cols = wire.events_to_columns(_op_events(30, dt=0.1))  # ts 0.0 .. 2.9
+    win.append(cols, node_id=0)
+    assert len(win) == 30
+    dropped = win.evict_older_than(2.9 - 1.0)
+    assert dropped == 19  # ts < 1.9 evicted
+    v = win.view()
+    assert len(win) == 11 and (v["ts"] >= 1.9).all()
+    assert win.evicted == 19
+
+
+def test_window_capacity_overflow_keeps_newest():
+    win = LayerWindow(Layer.OPERATOR, capacity=16, horizon_s=100.0)
+    win.append(wire.events_to_columns(_op_events(10)), node_id=0)
+    win.append(wire.events_to_columns(_op_events(10, t0=1.0)), node_id=1)
+    assert len(win) == 16
+    v = win.view()
+    # the 4 oldest rows (ts 0.0..0.3) were compacted away
+    assert float(v["ts"].min()) == pytest.approx(0.4)
+    assert set(np.unique(v["node"])) == {0, 1}
+
+
+def test_aggregator_tracks_lost_batches_and_source_drops():
+    agg = FleetAggregator(horizon_s=100.0)
+    agg.ingest(wire.encode_events(_op_events(5), node_id=0, seq=0))
+    # seq jumps 0 -> 3: two flushes lost in transit
+    agg.ingest(wire.encode_events(_op_events(5, t0=1.0), node_id=0, seq=3,
+                                  dropped=7))
+    s = agg.stats()
+    assert s["lost_batches"] == 2
+    assert s["events_dropped_at_source"] == 7
+    assert s["events_ingested"] == 10
+
+
+# ---------------------------------------------------------------------------
+# warm-start EM
+# ---------------------------------------------------------------------------
+
+def test_warm_start_matches_cold_fit_likelihood():
+    rng = np.random.default_rng(0)
+    X = np.concatenate([rng.normal([0, 0], 0.3, (600, 2)),
+                        rng.normal([4, 4], 0.5, (600, 2))]).astype(np.float32)
+    key = jax.random.PRNGKey(0)
+    cold, ll_cold = fit_gmm_streaming(X, key, n_components=2, n_iters=40)
+    # warm-started from the cold optimum, 3 iterations reach the same ll
+    warm, ll_warm = fit_gmm_streaming(X, key, n_components=2, n_iters=3,
+                                      params0=cold)
+    assert float(ll_warm[-1]) == pytest.approx(float(ll_cold[-1]), abs=1e-3)
+    # ... and from a *perturbed* start, a few warm iterations recover most of
+    # the gap to the cold fit
+    from repro.core.gmm import GMMParams
+    jig = GMMParams(cold.log_weights, cold.means + 0.25, cold.prec_chol)
+    rec, ll_rec = fit_gmm_streaming(X, key, n_components=2, n_iters=8,
+                                    params0=jig)
+    assert float(ll_rec[-1]) >= float(ll_cold[-1]) - 0.05
+    ll0 = float(total_log_likelihood(X, jig))
+    assert float(ll_rec[-1]) > ll0  # EM improved on the perturbed start
+
+
+def test_warm_start_rejects_component_mismatch():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(200, 2)).astype(np.float32)
+    key = jax.random.PRNGKey(0)
+    p, _ = fit_gmm_streaming(X, key, n_components=2, n_iters=5)
+    with pytest.raises(ValueError):
+        fit_gmm_streaming(X, key, n_components=3, n_iters=5, params0=p)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: chaos-injected two-node trace -> incidents
+# ---------------------------------------------------------------------------
+
+def _node_trace(rng, n_steps, fault_steps=(), fault_scale=8.0):
+    """Synthetic per-node trace: three operators + a step event per step."""
+    evs = []
+    base = {"matmul": 2e-3, "softmax": 4e-4, "layernorm": 2e-4}
+    for s in range(n_steps):
+        t = 0.05 * s
+        scale = fault_scale if s in fault_steps else 1.0
+        for op, b in base.items():
+            evs.append(Event(layer=Layer.OPERATOR, name=op, ts=t,
+                             dur=b * scale * rng.lognormal(0, 0.05),
+                             size=1e5, step=s))
+        evs.append(Event(layer=Layer.STEP, name="train_step", ts=t,
+                         dur=3e-3 * scale * rng.lognormal(0, 0.05), step=s))
+    return evs
+
+
+def test_two_node_chaos_trace_produces_matching_incident():
+    rng = np.random.default_rng(0)
+    fault_steps = set(range(140, 160))
+    agg = FleetAggregator(horizon_s=1000.0)
+    # warmup: clean steps 0..99 from both nodes
+    for node in (0, 1):
+        agg.ingest(wire.encode_events(_node_trace(rng, 100), node_id=node,
+                                      seq=0))
+    det = OnlineGMMDetector(min_events=64, contamination=0.02, seed=0)
+    warmed = det.warmup(agg)
+    assert Layer.OPERATOR in warmed and Layer.STEP in warmed
+    eng = IncidentEngine(gap_s=0.5, close_after_s=0.5, min_flags=5)
+    eng.set_floor(agg.t_latest)
+    # live: steps 100..199 in 20-step flushes; node 1 faulty during 140..160
+    for chunk in range(5):
+        lo, hi = 100 + chunk * 20, 120 + chunk * 20
+        for node in (0, 1):
+            faults = fault_steps if node == 1 else ()
+            evs = [e for e in _node_trace(rng, hi, faults)
+                   if lo <= e.step < hi]
+            agg.ingest(wire.encode_events(evs, node_id=node, seq=1 + chunk))
+        eng.update(det.detect(agg), now=agg.t_latest)
+    eng.flush()
+    incidents = eng.ranked()
+    assert incidents, "chaos injection produced no incidents"
+    top = incidents[0]
+    # the top incident localises the injected fault: right layer, right node
+    assert top.suspect_layer == Layer.OPERATOR
+    assert top.suspect_nodes == [1]
+    flagged = set(top.steps)
+    assert len(flagged & fault_steps) >= len(fault_steps) // 2
+    # report rendering is exercised and mentions the suspect
+    text = eng.render_report()
+    assert "suspect=operator" in text
+    import json
+    blob = json.loads(eng.json_report())
+    assert blob[0]["suspect_layer"] == "operator"
+
+
+def test_incident_watermark_no_double_count():
+    """Re-scoring the same window rows across ticks must not re-admit the
+    same flags into the incident stream."""
+    rng = np.random.default_rng(2)
+    agg = FleetAggregator(horizon_s=1000.0)
+    agg.ingest(wire.encode_events(_node_trace(rng, 100), node_id=0, seq=0))
+    det = OnlineGMMDetector(min_events=64, contamination=0.02, seed=0)
+    det.warmup(agg)
+    agg.ingest(wire.encode_events(
+        [e for e in _node_trace(rng, 130, set(range(110, 125)))
+         if e.step >= 100], node_id=0, seq=1))
+    eng = IncidentEngine(gap_s=0.5, close_after_s=0.5, min_flags=5)
+    eng.set_floor(5.0 - 0.05)  # warmup ends at ts 4.95
+    eng.update(det.detect(agg), now=agg.t_latest)
+    n1 = sum(g.shape[0] for g in eng._pending) + sum(
+        i.n_flags for i in eng.incidents)
+    # second tick over the SAME window: nothing new may be admitted
+    eng.update(det.detect(agg), now=agg.t_latest)
+    n2 = sum(g.shape[0] for g in eng._pending) + sum(
+        i.n_flags for i in eng.incidents)
+    assert n2 == n1
