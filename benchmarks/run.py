@@ -19,7 +19,7 @@ def main() -> None:
                     help="shorter sessions (CI-speed)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig2,fig3,fig4,table1,"
-                         "table2,fig5,stream,kernels")
+                         "table2,fig5,stream,session,kernels")
     args = ap.parse_args()
     n = 120 if args.quick else 300
     only = set(args.only.split(",")) if args.only else None
@@ -81,6 +81,13 @@ def main() -> None:
         record("stream_bench", time.time() - t0,
                f"ingest={out['ingest_events_per_s']:.2e}ev/s "
                f"detect={out['detect_ms_per_window']:.1f}ms")
+    if want("session"):
+        from benchmarks import session_bench
+        t0 = time.time()
+        out = session_bench.run(n_steps=150 if args.quick else 400)
+        record("session_bench", time.time() - t0,
+               f"batch_overhead={out['overhead_batch_pct']:+.1f}pct "
+               f"stream_overhead={out['overhead_stream_pct']:+.1f}pct")
     if want("kernels"):
         from benchmarks import kernel_bench
         t0 = time.time()

@@ -1,0 +1,107 @@
+"""Session-overhead benchmark: monitored vs unmonitored steps/sec through the
+unified `Session` API.
+
+    PYTHONPATH=src python -m benchmarks.session_bench
+
+Runs the same jitted step three ways — no session (baseline), a batch-mode
+session, and a stream-mode session — with the full `observe_step_fn` +
+`on_step` driver loop, and reports steps/sec plus relative overhead. This is
+the API-level companion of table2_overhead (which measures probe overhead on
+a real train step): here the step is deliberately small so the numbers bound
+the session machinery's worst case.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save_result
+from repro.session import DetectorSpec, MonitorSpec, Session
+
+PROBES = ["xla", "operator", "collective", "device", "step"]
+
+
+def _step_fn():
+    @jax.jit
+    def step(x):
+        w = jnp.sin(x)
+        return (x @ w) / jnp.maximum(jnp.abs(x).sum(), 1.0)
+
+    return step
+
+
+def _spec(mode: str) -> MonitorSpec:
+    return MonitorSpec(
+        mode=mode, probes=list(PROBES),
+        probe_options={"device": {"interval": 0.05}},
+        detector=DetectorSpec(min_events=48, sweep_every=100, flush_every=50,
+                              holdoff_steps=25))
+
+
+def _run_loop(n_steps: int, session: Session, warm_steps: int = 200) -> float:
+    """steps/sec of the monitored loop, measured after a warm phase that
+    covers the first detection sweep/tick (EM compilation happens there;
+    steady state is what a long-running driver sees)."""
+    step = _step_fn()
+    x = jnp.ones((128, 128))
+    with session.monitoring():
+        fn = session.observe_step_fn(step, sample_args=(x,))
+        t0 = 0.0
+        for s in range(warm_steps + n_steps):
+            if s == warm_steps:
+                x.block_until_ready()
+                t0 = time.perf_counter()
+            x = fn(x)
+            session.on_step(s)
+        x.block_until_ready()
+        dt = time.perf_counter() - t0
+    return n_steps / dt
+
+
+def run(n_steps: int = 400) -> Dict[str, object]:
+    base = _run_loop(n_steps, Session(MonitorSpec()))  # mode=off: identity
+    # probes-only: detection cadence pushed past the horizon, so this is the
+    # pure cost of the probe suite + session plumbing per step
+    probes_spec = _spec("batch")
+    probes_spec.detector.sweep_every = 10 ** 9
+    probes = _run_loop(n_steps, Session(probes_spec))
+    batch = _run_loop(n_steps, Session(_spec("batch")))
+    stream = _run_loop(n_steps, Session(_spec("stream")))
+
+    def ms_per_step(rate: float) -> float:
+        return 1e3 * (1.0 / rate - 1.0 / base)
+
+    out = {
+        "n_steps": n_steps,
+        "steps_per_s_unmonitored": base,
+        "steps_per_s_probes_only": probes,
+        "steps_per_s_batch": batch,
+        "steps_per_s_stream": stream,
+        # added wall time per step vs unmonitored — the steady-state cost a
+        # real (100ms+) train step would absorb
+        "probes_ms_per_step": ms_per_step(probes),
+        "batch_ms_per_step": ms_per_step(batch),
+        "stream_ms_per_step": ms_per_step(stream),
+        "overhead_batch_pct": 100.0 * (base / batch - 1.0),
+        "overhead_stream_pct": 100.0 * (base / stream - 1.0),
+    }
+    save_result("session_bench", out)
+    return out
+
+
+def main() -> None:
+    out = run()
+    print(f"unmonitored:      {out['steps_per_s_unmonitored']:8.0f} steps/s")
+    print(f"probes only:      {out['steps_per_s_probes_only']:8.0f} steps/s "
+          f"(+{out['probes_ms_per_step']:.2f} ms/step)")
+    print(f"batch session:    {out['steps_per_s_batch']:8.0f} steps/s "
+          f"(+{out['batch_ms_per_step']:.2f} ms/step; periodic full refit)")
+    print(f"stream session:   {out['steps_per_s_stream']:8.0f} steps/s "
+          f"(+{out['stream_ms_per_step']:.2f} ms/step; windowed warm EM)")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,9 +21,8 @@ import numpy as np
 
 from benchmarks.common import save_result
 from repro.core.events import Event, Layer
+from repro.session import DetectorSpec, detector_backend
 from repro.stream import wire
-from repro.stream.online import OnlineGMMDetector
-from repro.stream.window import FleetAggregator
 
 
 def synth_events(n_steps: int, node_seed: int, t0: float = 0.0,
@@ -66,11 +65,20 @@ def run(n_steps: int = 300, n_nodes: int = 4, repeats: int = 5
     wire_s = (time.perf_counter() - t0) / repeats
     wire_bytes = sum(len(b) for b in bufs)
 
+    # the whole pipeline under test (windows + detector) comes from one
+    # DetectorSpec resolved through the session registry — the same
+    # spec-driven path the drivers use
+    def make_backend():
+        return detector_backend("gmm", "stream")(
+            DetectorSpec(n_components=3, min_events=64, seed=0,
+                         capacity_per_layer=max(65536, n_events),
+                         horizon_s=1e9))
+
     # ---- aggregator ingest ----
     ingest_s = []
     for _ in range(repeats):
-        agg = FleetAggregator(capacity_per_layer=max(65536, n_events),
-                              horizon_s=1e9)
+        backend = make_backend()
+        agg = backend.aggregator
         t0 = time.perf_counter()
         for b in bufs:
             agg.ingest(b)
@@ -79,7 +87,7 @@ def run(n_steps: int = 300, n_nodes: int = 4, repeats: int = 5
     ingest_s = float(np.median(ingest_s))
 
     # ---- per-window detection latency (steady state) ----
-    det = OnlineGMMDetector(n_components=3, min_events=64, seed=0)
+    det = backend.window_detector
     det.warmup(agg)
     lat = []
     for r in range(repeats + 2):

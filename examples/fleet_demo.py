@@ -1,42 +1,46 @@
 """Streaming fleet monitor demo: two simulated nodes, chaos-injected faults,
-ranked incident report.
+ranked incident report — all declared by one spec JSON.
 
-    PYTHONPATH=src python examples/fleet_demo.py
+    PYTHONPATH=src python examples/fleet_demo.py [spec.json]
 
-Each "node" is an independently monitored worker (own Collector + probe
-suite) running the same jitted step; node 1 suffers an injected operator-
-latency fault (the pytorchfi analogue) mid-run. Node agents flush their ring
-buffers over the columnar wire format every flush interval; the fleet
-aggregator merges the batches into per-layer sliding windows; the online GMM
-(warm-started EM per window) flags anomalous events; the incident engine
-groups the flags across layers and nodes into ranked incidents.
+The monitoring session is described entirely by ``examples/fleet_spec.json``
+(probe suite, streaming GMM detector, incident parameters, report sink) and
+driven through the unified `Session` API. Each "node" is an independently
+monitored worker (``session.node(id)``: own Collector + probe suite) running
+the same jitted step; node 1 suffers an injected operator-latency fault (the
+pytorchfi analogue) mid-run. Node agents flush their ring buffers over the
+columnar wire format every flush interval; the fleet aggregator merges the
+batches into per-layer sliding windows; the online GMM (warm-started EM per
+window) flags anomalous events; the incident engine groups the flags across
+layers and nodes into ranked incidents.
 
-Expected output: >= 1 incident whose suspect layer is OPERATOR and whose
-suspect node is node 1 — the monitor localises the fault to the right layer
-of the right machine without ever instrumenting the step function.
+Expected output: `session.result()` contains >= 1 incident whose suspect
+layer is OPERATOR and whose suspect node is node 1 — the monitor localises
+the fault to the right layer of the right machine without ever instrumenting
+the step function.
 """
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import Collector, Layer
+from repro.core import Layer
 from repro.core.chaos import Fault, FaultInjector
-from repro.stream import StreamMonitor
+from repro.session import MonitorSpec, Session
 
+SPEC_PATH = os.path.join(os.path.dirname(__file__), "fleet_spec.json")
 WARMUP_STEPS = 80
 LIVE_STEPS = 160
 FAULT_LO, FAULT_HI = 60, 100  # live-phase step range of the injected fault
-FLUSH_EVERY = 16
 FAULT_LAYER = Layer.OPERATOR
 FAULT_NODE = 1
 
 
-def make_node(node_id: int):
-    """One simulated worker: collector + monitored step callable."""
-    col = Collector.standard(with_python=False, device_interval=0.01)
-    col.attach()
+def make_node(session: Session, node_id: int):
+    """One simulated worker: a session node + monitored step callable."""
+    node = session.node(node_id)
 
     @jax.jit
     def step_fn(x):
@@ -44,65 +48,61 @@ def make_node(node_id: int):
         return (x @ w) / jnp.maximum(jnp.abs(x).sum(), 1.0)
 
     x0 = jnp.ones((64, 64)) * (1.0 + 0.1 * node_id)
-    fn = col.observe_step_fn(step_fn, sample_args=(x0,))
-    return col, fn, x0
+    fn = node.observe_step_fn(step_fn, sample_args=(x0,))
+    return node, fn, x0
 
 
-def main() -> int:
+def main(spec_path: str = SPEC_PATH) -> int:
     t_start = time.time()
-    nodes = {nid: make_node(nid) for nid in (0, 1)}
-    monitor = StreamMonitor(n_components=3, contamination=0.02,
-                            horizon_s=120.0, min_events=64,
-                            incident_gap_s=0.5, incident_close_after_s=0.5,
-                            min_flags=6, seed=0)
-    for nid, (col, _, _) in nodes.items():
-        monitor.register_node(nid, col)
+    spec = MonitorSpec.from_file(spec_path)
+    session = Session(spec)
+    flush_every = spec.detector.flush_every
 
+    nodes = {nid: make_node(session, nid) for nid in (0, 1)}
     # operator-latency chaos on node 1 only (pytorchfi-style software fault)
     injector = FaultInjector([Fault("op_latency", FAULT_LO, FAULT_HI, 0.02)])
 
-    print(f"[fleet] warmup: {WARMUP_STEPS} clean steps on "
-          f"{len(nodes)} nodes")
-    xs = {nid: x0 for nid, (_, _, x0) in nodes.items()}
-    for s in range(WARMUP_STEPS):
-        for nid, (_, fn, _) in nodes.items():
-            xs[nid] = fn(xs[nid])
-    fitted = monitor.warmup()
-    print(f"[fleet] warmed layers: {[l.value for l in fitted]}")
+    with session.monitoring():
+        print(f"[fleet] spec: {spec_path} (mode={spec.mode}, "
+              f"probes={spec.probes})")
+        print(f"[fleet] warmup: {WARMUP_STEPS} clean steps on "
+              f"{len(nodes)} nodes")
+        xs = {nid: x0 for nid, (_, _, x0) in nodes.items()}
+        for s in range(WARMUP_STEPS):
+            for nid, (_, fn, _) in nodes.items():
+                xs[nid] = fn(xs[nid])
+        fitted = session.warmup()
+        print(f"[fleet] warmed layers: {[l.value for l in fitted]}")
 
-    print(f"[fleet] live: {LIVE_STEPS} steps, op-latency fault on node "
-          f"{FAULT_NODE} during live steps {FAULT_LO}..{FAULT_HI}")
-    for s in range(LIVE_STEPS):
-        for nid, (col, fn, _) in nodes.items():
-            if nid == FAULT_NODE:
-                injector.apply(s, col)
-            xs[nid] = fn(xs[nid])
-        if (s + 1) % FLUSH_EVERY == 0:
-            for inc in monitor.tick():
-                print("  " + inc.render())
-    injector.clear(nodes[FAULT_NODE][0])
-    for inc in monitor.finish():
-        print("  " + inc.render())
-    for col, _, _ in nodes.values():
-        col.detach()
+        print(f"[fleet] live: {LIVE_STEPS} steps, op-latency fault on node "
+              f"{FAULT_NODE} during live steps {FAULT_LO}..{FAULT_HI}")
+        for s in range(LIVE_STEPS):
+            for nid, (node, fn, _) in nodes.items():
+                if nid == FAULT_NODE:
+                    injector.apply(s, node.collector)
+                xs[nid] = fn(xs[nid])
+            if (s + 1) % flush_every == 0:
+                for inc in session.tick():
+                    print("  " + inc.render())
+        injector.clear(nodes[FAULT_NODE][0].collector)
 
-    print("\n" + monitor.render_report())
-    incidents = monitor.incidents
-    hits = [i for i in incidents if i.suspect_layer == FAULT_LAYER
+    report = session.result()
+    print("\n" + report.render())
+    hits = [i for i in report.incidents if i.suspect_layer == FAULT_LAYER
             and FAULT_NODE in i.suspect_nodes]
     elapsed = time.time() - t_start
-    print(f"\n[fleet] {len(incidents)} incident(s), "
+    print(f"\n[fleet] {len(report.incidents)} incident(s), "
           f"{len(hits)} matching the injected fault "
           f"(layer={FAULT_LAYER.value}, node={FAULT_NODE}); "
           f"{elapsed:.1f}s wall")
     if not hits:
         print("[fleet] FAIL: injected fault not localised")
         return 1
-    top = monitor.incidents[0]
+    top = max(report.incidents, key=lambda i: i.severity)
     print(f"[fleet] OK: top incident blames {top.suspect_layer.value} on "
           f"node(s) {top.suspect_nodes}")
     return 0
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    raise SystemExit(main(*sys.argv[1:2]))

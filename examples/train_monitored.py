@@ -21,8 +21,9 @@ if __name__ == "__main__":
                     help="real GPT-2 124M (CPU: ~seconds/step)")
     ap.add_argument("--steps", type=int, default=300)
     args = ap.parse_args()
+    spec = '{"mode": "batch", "detector": {"min_events": 48}}'
     argv = ["--arch", "gpt2", "--steps", str(args.steps),
-            "--monitor", "--inject-faults",
+            "--monitor-spec", spec, "--inject-faults",
             "--checkpoint-dir", "results/ckpt_gpt2",
             "--trace-out", "results/gpt2_trace.json",
             "--batch", "8" if args.full else "4",

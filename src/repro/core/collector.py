@@ -14,11 +14,11 @@ from __future__ import annotations
 
 import contextlib
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.events import Event, Layer, RingBuffer, export_perfetto
-from repro.core.probes import (CollectiveProbe, DeviceProbe, JaxRuntimeProbe,
-                               OperatorProbe, PythonProbe, Probe, StepProbe)
+from repro.core.probes import Probe
 
 
 class Collector:
@@ -27,6 +27,10 @@ class Collector:
         self.probes = probes
         self.t0 = time.perf_counter()
         self._by_name = {p.name: p for p in probes}
+        step = self._by_name.get("step")
+        if step is not None:
+            for p in probes:
+                p.current_step = lambda s=step: s.step_count
 
     # -- construction ---------------------------------------------------------
     @staticmethod
@@ -34,26 +38,32 @@ class Collector:
                  n_devices: int = 1, capacity: int = 1_000_000,
                  with_python: bool = True,
                  python_include=("repro", "jax")) -> "Collector":
-        op = OperatorProbe()
-        coll = CollectiveProbe()
-        dev = DeviceProbe(interval=device_interval, n_devices=n_devices)
-        step = StepProbe(operator_probe=op, collective_probe=coll,
-                         device_probe=dev)
-        probes: List[Probe] = [JaxRuntimeProbe(), op, coll, dev, step]
-        if with_python:
-            probes.insert(0, PythonProbe(include=python_include,
-                                         sample_every=python_sampling))
-        c = Collector(probes, capacity)
-        for p in probes:
-            p.current_step = lambda s=step: s.step_count
-        return c
+        """Deprecated shim: the standard suite now comes from the session
+        probe registry (`repro.session.registry`); prefer building a
+        `repro.session.Session` from a `MonitorSpec`."""
+        # late import: the session package imports this module
+        from repro.session.registry import build_probes
+
+        names = (["python"] if with_python else []) + \
+            ["xla", "operator", "collective", "device", "step"]
+        options = {
+            "python": {"include": python_include,
+                       "sample_every": python_sampling},
+            "device": {"interval": device_interval, "n_devices": n_devices},
+        }
+        return Collector(build_probes(names, options), capacity)
 
     def __getitem__(self, name: str) -> Probe:
-        return self._by_name[name]
+        try:
+            return self._by_name[name]
+        except KeyError:
+            raise KeyError(
+                f"no probe named {name!r} in this collector; "
+                f"available: {sorted(self._by_name)}") from None
 
     @property
-    def step_probe(self) -> StepProbe:
-        return self._by_name["step"]
+    def step_probe(self) -> Probe:
+        return self["step"]
 
     # -- lifecycle ------------------------------------------------------------
     def attach(self) -> None:
@@ -86,13 +96,19 @@ class Collector:
             try:
                 hlo = lowered.as_text()
                 self._by_name["collective"].register_compiled(hlo)
-            except Exception:
-                pass
+            except Exception as e:
+                warnings.warn(
+                    f"probe 'collective': register_compiled failed ({e!r}); "
+                    "collective-layer events will be missing", RuntimeWarning,
+                    stacklevel=2)
         if sample_args is not None:
             try:
                 self._by_name["operator"].register_fn(fn, *sample_args)
-            except Exception:
-                pass
+            except Exception as e:
+                warnings.warn(
+                    f"probe 'operator': register_fn failed ({e!r}); "
+                    "operator-layer events will be missing", RuntimeWarning,
+                    stacklevel=2)
         return step.wrap(fn)
 
     # -- data -----------------------------------------------------------------

@@ -81,21 +81,35 @@ class RingBuffer:
         the buffer continuously, so len() is not a throughput stat)."""
         return self._pushed
 
+    # NOTE: the locked regions of drain/snapshot must contain no Python-level
+    # call/return (only C-level slicing): a Python frame finishing inside the
+    # lock fires the python probe's profile hook, whose emit() -> push()
+    # re-enters this non-reentrant lock on the same thread — a deadlock
+    # whenever the buffer is read while that probe is attached.
+
     def drain(self) -> List[Event]:
         """Remove and return all events, oldest first."""
         with self._lock:
             n, head = self._count, self._head
             start = (head - n) % self.capacity
-            out = [self._buf[(start + i) % self.capacity] for i in range(n)]
+            if start + n <= self.capacity:
+                out = self._buf[start:start + n]
+            else:
+                out = self._buf[start:] + self._buf[:(start + n)
+                                                    % self.capacity]
             self._count = 0
-            return [e for e in out if e is not None]
+        return [e for e in out if e is not None]
 
     def snapshot(self) -> List[Event]:
         with self._lock:
             n, head = self._count, self._head
             start = (head - n) % self.capacity
-            return [e for e in (self._buf[(start + i) % self.capacity]
-                                for i in range(n)) if e is not None]
+            if start + n <= self.capacity:
+                out = self._buf[start:start + n]
+            else:
+                out = self._buf[start:] + self._buf[:(start + n)
+                                                    % self.capacity]
+        return [e for e in out if e is not None]
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,11 @@
 """Serving driver: batched generation with optional eACGM monitoring.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gpt2 --reduced \
-        --batch 4 --tokens 32 --monitor
+        --batch 4 --tokens 32 --monitor-spec '{"mode": "batch"}'
+
+Monitoring goes through the same `MonitorSpec`/`Session` path as training;
+the old ``--monitor`` / ``--stream-monitor`` flags remain as deprecated
+shims onto the spec.
 """
 from __future__ import annotations
 
@@ -16,6 +20,14 @@ import numpy as np
 from repro.config import get_arch, reduced
 from repro.models.model import Runtime, init_params
 from repro.serve.engine import ServeEngine
+from repro.session import MonitorSpec, Session
+
+# historical tuning of the serve driver (legacy-flag path only)
+LEGACY_SPEC_DEFAULTS = {
+    "probe_options": {"python": {"sample_every": 25},
+                      "device": {"interval": 0.05}},
+    "detector": {"min_events": 48},
+}
 
 
 def main(argv=None) -> int:
@@ -28,14 +40,13 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--monitor", action="store_true")
+    MonitorSpec.add_cli_args(ap)
+    ap.add_argument("--monitor", action="store_true",
+                    help="[deprecated] = --monitor-spec '{\"mode\":\"batch\"}'")
     ap.add_argument("--stream-monitor", action="store_true",
-                    help="streaming monitor: warmup generate, then online "
-                         "windowed detection + incident report "
-                         "(implies --monitor)")
+                    help="[deprecated] = --monitor-spec "
+                         "'{\"mode\":\"stream\"}'")
     args = ap.parse_args(argv)
-    if args.stream_monitor:
-        args.monitor = True
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -49,49 +60,39 @@ def main(argv=None) -> int:
                          batch_size=args.batch, max_len=args.max_len,
                          temperature=args.temperature, seed=args.seed)
 
-    collector = stream_mon = None
-    if args.monitor:
-        from repro.core import Collector
-
-        collector = Collector.standard(python_sampling=25,
-                                       device_interval=0.05)
-        collector.attach()
-        engine._step = collector.observe_step_fn(engine._step)
+    spec = MonitorSpec.from_args(args, legacy_defaults=LEGACY_SPEC_DEFAULTS)
+    session = Session(spec)
 
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)
 
-    if args.stream_monitor:
-        from repro.stream import StreamMonitor
+    with session.monitoring():
+        engine._step = session.observe_step_fn(engine._step)
+        if spec.mode == "stream":
+            # calibration traffic: a short clean generate fits the per-layer
+            # baselines (decode steps are homogeneous — a small constant is
+            # enough; don't scale warmup with the requested generation length)
+            engine.generate(prompts, 24)
+            fitted = session.warmup()
+            print(f"[monitor] warmed layers: {[l.value for l in fitted]}")
 
-        stream_mon = StreamMonitor(n_components=3, min_events=48,
-                                   seed=args.seed)
-        stream_mon.register_node(0, collector)
-        # calibration traffic: a short clean generate fits the per-layer
-        # baselines (decode steps are homogeneous — a small constant is
-        # enough; don't scale warmup with the requested generation length)
-        engine.generate(prompts, 24)
-        fitted = stream_mon.warmup()
-        print(f"[stream] warmed layers: {[l.value for l in fitted]}")
-
-    t0 = time.time()
-    out = engine.generate(prompts, args.tokens)
-    dt = time.time() - t0
+        t0 = time.time()
+        out = engine.generate(prompts, args.tokens)
+        dt = time.time() - t0
     total_tokens = args.batch * (args.tokens + args.prompt_len - 1)
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({total_tokens / dt:.1f} tok/s decode)")
     print("sample:", out[0, : args.prompt_len + 8].tolist())
-    if stream_mon is not None:
-        for inc in stream_mon.finish():
-            print("[stream] " + inc.render())
-        print("[stream] " + stream_mon.render_report())
-    if collector is not None:
-        stats = collector.overhead_stats()
+    if not session.off:
+        report = session.result()
+        print(report.render())
         # events_total survives the streaming agent's drains; "events" is
         # just what is still buffered
-        print("[monitor] events:", stats["events_total"])
-        collector.detach()
+        totals = {nid: o["events_total"]
+                  for nid, o in report.overhead.items()
+                  if isinstance(o, dict) and "events_total" in o}
+        print("[monitor] events:", totals)
     return 0
 
 

@@ -1,35 +1,42 @@
 """Training driver with first-class eACGM monitoring.
 
     PYTHONPATH=src python -m repro.launch.train --arch gpt2 --reduced \
-        --steps 200 --batch 8 --seq 128 --monitor --inject-faults
+        --steps 200 --batch 8 --seq 128 --monitor-spec '{"mode": "batch"}' \
+        --inject-faults
 
-The --monitor flag attaches the collector at runtime: the model/step code is
-IDENTICAL with and without monitoring (the paper's zero-instrumentation
-contract). Fault tolerance: deterministic data pipeline + async checkpoints +
-auto-resume; the Governor turns detected anomalies into actions (its
-checkpoint_now action triggers an immediate snapshot).
+Monitoring is described by one declarative `MonitorSpec` (inline JSON, a JSON
+file path, or the REPRO_MONITOR_SPEC env var); the `Session` facade attaches
+the probe suite at runtime, so the model/step code is IDENTICAL with and
+without monitoring (the paper's zero-instrumentation contract). The old
+``--monitor`` / ``--stream-monitor`` / ``--stream-flush-every`` flags still
+work as deprecated shims onto the spec. Fault tolerance: deterministic data
+pipeline + async checkpoints + auto-resume; the Governor turns detected
+anomalies into actions (its checkpoint_now action triggers an immediate
+snapshot).
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
-import os
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import TrainConfig, get_arch, reduced
 from repro.data import SyntheticLMData
 from repro.launch.mesh import make_local_mesh
 from repro.models.model import Runtime
 from repro.roofline import model_flops
+from repro.session import MonitorSpec, Session
 from repro.train.checkpoint import CheckpointManager
 from repro.train.step import (init_train_state, make_optimizer_for,
                               make_train_step)
+
+# historical tuning of the train driver, applied only on the legacy-flag path
+# (an explicit --monitor-spec keeps full control of these)
+LEGACY_PROBE_OPTIONS = {"python": {"sample_every": 25},
+                        "device": {"interval": 0.05}}
 
 
 def main(argv=None) -> int:
@@ -49,14 +56,17 @@ def main(argv=None) -> int:
     ap.add_argument("--model-mesh", type=int, default=1)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=50)
-    ap.add_argument("--monitor", action="store_true")
+    MonitorSpec.add_cli_args(ap)
+    ap.add_argument("--monitor", action="store_true",
+                    help="[deprecated] = --monitor-spec '{\"mode\":\"batch\"}'")
     ap.add_argument("--stream-monitor", action="store_true",
-                    help="streaming fleet monitor: online windowed detection"
-                         " + incident reports (implies --monitor)")
+                    help="[deprecated] = --monitor-spec "
+                         "'{\"mode\":\"stream\"}'")
     ap.add_argument("--stream-flush-every", type=int, default=25,
-                    help="steps between agent flush / detection ticks")
+                    help="[deprecated] = spec detector.flush_every")
     ap.add_argument("--inject-faults", action="store_true")
-    ap.add_argument("--trace-out", default="")
+    ap.add_argument("--trace-out", default="",
+                    help="perfetto trace path (= a \"perfetto\" sink)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
@@ -90,108 +100,77 @@ def main(argv=None) -> int:
             state, start_step = restored, rstep
             print(f"[resume] restored checkpoint at step {rstep}")
 
-    # ---- monitoring (runtime attachment; user code unchanged) ----
-    if args.stream_monitor:
-        args.monitor = True
-    collector = injector = governor = monitor = stream_mon = None
-    raw_batch = data.batch(0)
-    if args.monitor:
-        from repro.core import Collector, FaultInjector, FullStackMonitor, Governor
+    # ---- monitoring session (runtime attachment; user code unchanged) ----
+    # the batch sweep historically fitted with min_events=48; the stream
+    # path always used the StreamMonitor default (64) — preserve both
+    legacy_defaults = {"probe_options": LEGACY_PROBE_OPTIONS}
+    if not args.stream_monitor:
+        legacy_defaults["detector"] = {"min_events": 48}
+    spec = MonitorSpec.from_args(args, legacy_defaults=legacy_defaults)
+    session = Session(spec)
+    injector = None
+    if args.inject_faults and not session.off:
+        from repro.core import FaultInjector
 
-        collector = Collector.standard(python_sampling=25,
-                                       device_interval=0.05)
-        collector.attach()
-        from repro.config import SHAPES, ShapeConfig
-        shp = ShapeConfig("run", args.seq, args.batch, "train")
-        lowered = None
-        try:
-            lowered = jax.jit(make_train_step(cfg, rt, opt)).lower(
-                state, jax.tree.map(jnp.asarray, raw_batch))
-        except Exception:
-            pass
-        step_fn = collector.observe_step_fn(
-            step_fn, lowered=lowered,
-            flops_per_step=model_flops(cfg, shp),
-            mem_gb=sum(x.size * x.dtype.itemsize for x in
-                       jax.tree.leaves(state.params)) / 2**30)
-        governor = Governor()
-        if args.inject_faults:
-            injector = FaultInjector.random_schedule(
-                args.steps, ["op_latency", "net_latency", "hw_contention"],
-                seed=args.seed)
-        if args.stream_monitor:
-            from repro.stream import StreamMonitor
+        injector = FaultInjector.random_schedule(
+            args.steps, ["op_latency", "net_latency", "hw_contention"],
+            seed=args.seed)
 
-            stream_mon = StreamMonitor(n_components=3, seed=args.seed)
-            stream_mon.register_node(0, collector)
-
-    # ---- training loop ----
     losses = []
     t0 = time.time()
-    fit_window = []
-    from repro.core.detector import FullStackMonitor as _FSM
-    for step in range(start_step, args.steps):
+    with session.monitoring():
+        if not session.off:
+            from repro.config import ShapeConfig
+            shp = ShapeConfig("run", args.seq, args.batch, "train")
+            raw_batch = data.batch(0)
+            lowered = None
+            try:
+                lowered = jax.jit(make_train_step(cfg, rt, opt)).lower(
+                    state, jax.tree.map(jnp.asarray, raw_batch))
+            except Exception:
+                pass
+            step_fn = session.observe_step_fn(
+                step_fn, lowered=lowered,
+                flops_per_step=model_flops(cfg, shp),
+                mem_gb=sum(x.size * x.dtype.itemsize for x in
+                           jax.tree.leaves(state.params)) / 2**30)
+
+        # ---- training loop ----
+        for step in range(start_step, args.steps):
+            if injector is not None:
+                injector.apply(step, session.collector)
+            batch = jax.tree.map(jnp.asarray, data.batch(step))
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {loss:8.4f} "
+                      f"gnorm {float(metrics['grad_norm']):8.3f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"({(time.time()-t0):6.1f}s)")
+            if ckpt is not None and step and step % args.checkpoint_every == 0:
+                ckpt.save(step, state, meta={"loss": loss})
+            # periodic anomaly sweep: the session owns the cadence
+            out = session.on_step(step)
+            if out.warmed:
+                print(f"[monitor] warmed layers: "
+                      f"{[l.value for l in out.warmed]}")
+            for inc in out.incidents:
+                print("[monitor] " + inc.render())
+            for action in out.actions:
+                print(f"[governor] {action.kind}: {action.reason}")
+                if action.kind == "checkpoint_now" and ckpt is not None:
+                    ckpt.save(step, state, meta={"loss": loss,
+                                                 "reason": "governor"})
         if injector is not None:
-            injector.apply(step, collector)
-        batch = jax.tree.map(jnp.asarray, data.batch(step))
-        state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])
-        losses.append(loss)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            print(f"step {step:5d} loss {loss:8.4f} "
-                  f"gnorm {float(metrics['grad_norm']):8.3f} "
-                  f"lr {float(metrics['lr']):.2e} "
-                  f"({(time.time()-t0):6.1f}s)")
-        if ckpt is not None and step and step % args.checkpoint_every == 0:
-            ckpt.save(step, state, meta={"loss": loss})
-        # periodic anomaly sweep
-        if stream_mon is not None:
-            # streaming path: agent flush -> windowed online GMM -> incidents
-            if step and step % args.stream_flush_every == 0:
-                if not stream_mon.detector.warmed:
-                    fitted = stream_mon.warmup()
-                    if fitted:
-                        print(f"[stream] warmed layers: "
-                              f"{[l.value for l in fitted]}")
-                else:
-                    for inc in stream_mon.tick():
-                        print("[stream] " + inc.render())
-                    for action in governor.decide(stream_mon.last_detections):
-                        print(f"[governor] {action.kind}: {action.reason}")
-                        if action.kind == "checkpoint_now" and ckpt is not None:
-                            ckpt.save(step, state, meta={"loss": loss,
-                                                         "reason": "governor"})
-        elif collector is not None and step and step % 50 == 0:
-            events = collector.snapshot()
-            train_events = [e for e in events if e.step < step - 25]
-            if train_events:
-                mon = _FSM(n_components=3, min_events=48).fit(train_events)
-                results = mon.detect(events)
-                for action in governor.decide(results):
-                    print(f"[governor] {action.kind}: {action.reason}")
-                    if action.kind == "checkpoint_now" and ckpt is not None:
-                        ckpt.save(step, state, meta={"loss": loss,
-                                                     "reason": "governor"})
-    if injector is not None:
-        injector.clear(collector)
+            injector.clear(session.collector)
     if ckpt is not None:
         ckpt.save(args.steps - 1, state, meta={"loss": losses[-1]})
         ckpt.close()
-    if stream_mon is not None:
-        for inc in stream_mon.finish():
-            print("[stream] " + inc.render())
-        print("[stream] " + stream_mon.render_report())
-    if collector is not None:
-        if args.trace_out:
-            # under streaming the agent drains the ring buffer, so export
-            # from the aggregated windows instead of the (empty) collector
-            if stream_mon is not None:
-                stream_mon.export_trace(args.trace_out)
-            else:
-                collector.export_trace(args.trace_out)
-            print(f"[monitor] perfetto trace -> {args.trace_out}")
-        print("[monitor] overhead stats:", collector.overhead_stats())
-        collector.detach()
+    if not session.off:
+        report = session.result()
+        print(report.render())
+        print("[monitor] overhead stats:", report.overhead)
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
           f"{args.steps - start_step} steps in {time.time()-t0:.1f}s")
     return 0

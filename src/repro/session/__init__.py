@@ -1,0 +1,26 @@
+"""Unified monitoring session API: one declarative spec, pluggable
+probes/detectors/sinks for batch and streaming.
+
+Public API:
+    MonitorSpec / DetectorSpec / SinkSpec — declarative session description
+        (Python / JSON file / --monitor-spec CLI / REPRO_MONITOR_SPEC env)
+    Session          — one lifecycle over batch + streaming monitoring
+    MonitorReport    — unified per-layer detections + incidents result
+    register_probe / register_detector / register_sink — extension points
+    BatchGMMBackend / OnlineGMMBackend — Detector-protocol adapters over the
+        existing GMM detectors
+"""
+from repro.session.spec import (DetectorSpec, MonitorSpec,  # noqa: F401
+                                SinkSpec, SPEC_ENV_VAR, STANDARD_PROBES)
+from repro.session.registry import (build_probe, build_probes,  # noqa: F401
+                                    detector_backend, probe_names,
+                                    register_detector, register_probe,
+                                    register_sink, sink_kinds)
+from repro.session.detectors import (BatchGMMBackend,  # noqa: F401
+                                     Detector, OnlineGMMBackend)
+from repro.session.sinks import (JsonlEventSink, PerfettoSink,  # noqa: F401
+                                 ReportSink, Sink, WireSink,
+                                 read_wire_capture)
+from repro.session.report import LayerSummary, MonitorReport  # noqa: F401
+from repro.session.session import (NodeHandle, Session,  # noqa: F401
+                                   StepOutcome)

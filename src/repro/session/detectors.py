@@ -1,0 +1,146 @@
+"""Detector protocol + adapters over the existing GMM detectors.
+
+A session detector backend exposes one lifecycle regardless of mode:
+
+    fit(...)    -> fit/refit baselines on (assumed clean) reference data
+    update(...) -> score the latest data; returns per-layer detections
+    flags()     -> the most recent per-layer detections
+
+`BatchGMMBackend` adapts `core.detector.FullStackMonitor` (offline refit on a
+clean prefix), `OnlineGMMBackend` adapts the streaming pipeline
+(`StreamMonitor`: agents -> windows -> warm-started EM -> incidents). Both
+are registered under the "gmm" detector name, resolved per mode by the
+session registry, so a spec can swap detector families without the drivers
+knowing.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Protocol, runtime_checkable
+
+from repro.core.collector import Collector
+from repro.core.detector import DetectionResult, FullStackMonitor
+from repro.core.events import Event, Layer
+from repro.session.registry import register_detector
+from repro.session.spec import DetectorSpec
+from repro.stream.incidents import Incident
+from repro.stream.monitor import StreamMonitor
+from repro.stream.online import WindowDetection
+
+BATCH_CONTAMINATION = 1 / 6  # paper Table-I threshold policy
+STREAM_CONTAMINATION = 0.02  # per-window rate of the fleet monitor
+
+
+@runtime_checkable
+class Detector(Protocol):
+    """Common detector lifecycle (duck-typed; see module docstring)."""
+
+    def fit(self, data) -> List[Layer]: ...
+
+    def update(self, data) -> Dict[Layer, object]: ...
+
+    def flags(self) -> Dict[Layer, object]: ...
+
+
+@register_detector("gmm", mode="batch")
+class BatchGMMBackend:
+    """`FullStackMonitor` behind the Detector protocol.
+
+    ``fit`` takes the clean reference events (and may be called again on a
+    later, longer prefix — each call is a full refit, matching the periodic
+    sweep the batch driver always ran); ``update`` scores an event list with
+    the current models.
+    """
+
+    def __init__(self, spec: Optional[DetectorSpec] = None):
+        self.spec = spec or DetectorSpec()
+        self._monitor: Optional[FullStackMonitor] = None
+        self._last: Dict[Layer, DetectionResult] = {}
+
+    @property
+    def fitted(self) -> bool:
+        return self._monitor is not None and bool(self._monitor.detectors)
+
+    def fit(self, events: List[Event]) -> List[Layer]:
+        contamination = (BATCH_CONTAMINATION
+                         if self.spec.contamination is None
+                         else self.spec.contamination)
+        self._monitor = FullStackMonitor(
+            n_components=self.spec.n_components,
+            contamination=contamination,
+            min_events=self.spec.min_events).fit(events)
+        return list(self._monitor.detectors)
+
+    def update(self, events: List[Event]) -> Dict[Layer, DetectionResult]:
+        if not self.fitted:
+            return {}
+        self._last = self._monitor.detect(events)
+        return self._last
+
+    def flags(self) -> Dict[Layer, DetectionResult]:
+        return self._last
+
+
+@register_detector("gmm", mode="stream")
+class OnlineGMMBackend:
+    """The streaming pipeline behind the Detector protocol.
+
+    Owns a `StreamMonitor`; node collectors register via ``register_node``.
+    ``fit`` performs (idempotent) warmup on whatever the nodes have produced,
+    ``update`` runs one poll/detect/incident tick. Incidents closed so far
+    accumulate on ``.incidents``.
+    """
+
+    def __init__(self, spec: Optional[DetectorSpec] = None):
+        self.spec = spec or DetectorSpec()
+        contamination = (STREAM_CONTAMINATION
+                         if self.spec.contamination is None
+                         else self.spec.contamination)
+        self.monitor = StreamMonitor(
+            n_components=self.spec.n_components,
+            contamination=contamination,
+            horizon_s=self.spec.horizon_s,
+            capacity_per_layer=self.spec.capacity_per_layer,
+            min_events=self.spec.min_events,
+            incident_gap_s=self.spec.incident_gap_s,
+            incident_close_after_s=self.spec.incident_close_after_s,
+            min_flags=self.spec.min_flags,
+            seed=self.spec.seed)
+        self.monitor.detector.drift_tol = self.spec.drift_tol
+        self.closed: List[Incident] = []
+
+    @property
+    def fitted(self) -> bool:
+        return self.monitor.detector.warmed
+
+    @property
+    def aggregator(self):
+        """The fleet's per-layer sliding windows (FleetAggregator)."""
+        return self.monitor.aggregator
+
+    @property
+    def window_detector(self):
+        """The raw per-window detector (OnlineGMMDetector)."""
+        return self.monitor.detector
+
+    def register_node(self, node_id: int, collector: Collector,
+                      ts_offset: float = 0.0) -> None:
+        self.monitor.register_node(node_id, collector, ts_offset=ts_offset)
+
+    def fit(self, data=None) -> List[Layer]:
+        return self.monitor.warmup()
+
+    def update(self, data=None) -> Dict[Layer, WindowDetection]:
+        self.closed.extend(self.monitor.tick())
+        return self.monitor.last_detections
+
+    def finish(self) -> List[Incident]:
+        closed = self.monitor.finish()
+        self.closed.extend(closed)
+        return closed
+
+    def flags(self) -> Dict[Layer, WindowDetection]:
+        return self.monitor.last_detections
+
+    @property
+    def incidents(self) -> List[Incident]:
+        return self.monitor.incidents

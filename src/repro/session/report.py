@@ -1,0 +1,97 @@
+"""MonitorReport: the unified result of a monitoring session.
+
+Batch detections (`DetectionResult`) and streaming window detections
+(`WindowDetection`) share flags/scores/log_delta/steps; the report normalises
+them into per-layer summaries and carries the streaming incidents alongside,
+so callers read one shape regardless of the spec's mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.core.events import Layer
+from repro.stream.incidents import Incident
+
+
+@dataclasses.dataclass
+class LayerSummary:
+    layer: str
+    events: int
+    anomaly_rate: float
+    anomalous_steps: List[int]
+    log_delta: float
+
+
+@dataclasses.dataclass
+class MonitorReport:
+    mode: str
+    layers: Dict[str, LayerSummary]
+    incidents: List[Incident]
+    overhead: Dict[str, Any]
+    sink_outputs: Dict[str, str]
+    # raw per-layer detection objects (DetectionResult | WindowDetection)
+    detections: Dict[Layer, Any] = dataclasses.field(default_factory=dict,
+                                                     repr=False)
+
+    @classmethod
+    def build(cls, mode: str, detections: Dict[Layer, Any],
+              incidents: List[Incident], overhead: Dict[str, Any],
+              sink_outputs: Dict[str, str]) -> "MonitorReport":
+        layers = {}
+        for layer, det in detections.items():
+            layers[layer.value] = LayerSummary(
+                layer=layer.value,
+                events=int(len(det.flags)),
+                anomaly_rate=float(det.anomaly_rate),
+                anomalous_steps=[int(s) for s in det.anomalous_steps()],
+                log_delta=float(det.log_delta))
+        return cls(mode=mode, layers=layers, incidents=list(incidents),
+                   overhead=overhead, sink_outputs=sink_outputs,
+                   detections=dict(detections))
+
+    def anomalous_steps(self) -> List[int]:
+        steps = sorted({s for ls in self.layers.values()
+                        for s in ls.anomalous_steps})
+        return steps
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "mode": self.mode,
+            "layers": {k: dataclasses.asdict(v)
+                       for k, v in self.layers.items()},
+            "incidents": [i.to_json() for i in self.incidents],
+            "anomalous_steps": self.anomalous_steps(),
+            "overhead": self.overhead,
+            "sink_outputs": self.sink_outputs,
+        }
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+        return path
+
+    def render(self) -> str:
+        if self.mode == "off":
+            return "monitoring off"
+        lines = [f"monitor report ({self.mode} mode):"]
+        for name, ls in sorted(self.layers.items()):
+            steps = ls.anomalous_steps
+            tail = (f" steps={steps[0]}..{steps[-1]}({len(steps)})"
+                    if steps else "")
+            lines.append(f"  {name:<10} {ls.events:6d} events  "
+                         f"anomaly_rate={ls.anomaly_rate:.3f}{tail}")
+        if self.incidents:
+            ranked = sorted(self.incidents, key=lambda i: -i.severity)
+            lines.append(f"  {len(ranked)} incident(s), ranked:")
+            lines += ["  " + i.render() for i in ranked]
+        elif self.mode == "stream":
+            lines.append("  no incidents")
+        for kind, path in self.sink_outputs.items():
+            lines.append(f"  sink {kind} -> {path}")
+        return "\n".join(lines)

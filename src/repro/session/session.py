@@ -1,0 +1,283 @@
+"""Session: one facade over batch and streaming monitoring.
+
+The session subsumes the two hand-wired paths the drivers used to carry
+(`Collector.standard()` + `FullStackMonitor` vs `StreamMonitor`'s
+register/poll/tick/finish) behind a single lifecycle driven by a
+`MonitorSpec`:
+
+    spec = MonitorSpec(mode="stream")          # or from_file / from_args
+    session = Session(spec)
+    with session.monitoring():
+        step_fn = session.observe_step_fn(step_fn, lowered=lowered)
+        for step, batch in enumerate(data):
+            state = step_fn(state, batch)
+            out = session.on_step(step)        # cadence handled by the spec
+    report = session.result()                  # unified MonitorReport
+
+``mode="off"`` makes every call a no-op (``observe_step_fn`` returns the
+callable unchanged), so drivers keep exactly one code path. Multi-node fleets
+use ``session.node(node_id)`` to get additional monitored nodes (own
+collector + probe suite built from the same spec).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.collector import Collector
+from repro.core.events import Event, Layer
+from repro.core.governor import Action, Governor
+from repro.session import sinks as sinks_mod
+from repro.session.registry import build_probes, detector_backend
+from repro.session.report import MonitorReport
+from repro.session.spec import MonitorSpec
+from repro.stream import wire
+from repro.stream.incidents import Incident
+
+
+@dataclasses.dataclass
+class StepOutcome:
+    """What one `on_step` call produced (empty between cadence points)."""
+
+    warmed: List[Layer] = dataclasses.field(default_factory=list)
+    incidents: List[Incident] = dataclasses.field(default_factory=list)
+    actions: List[Action] = dataclasses.field(default_factory=list)
+    detections: Dict[Layer, Any] = dataclasses.field(default_factory=dict)
+
+    def __bool__(self) -> bool:
+        return bool(self.warmed or self.incidents or self.actions
+                    or self.detections)
+
+
+class NodeHandle:
+    """One monitored node: a collector built from the session's spec."""
+
+    def __init__(self, session: "Session", node_id: int,
+                 collector: Collector):
+        self.session = session
+        self.node_id = node_id
+        self.collector = collector
+
+    def observe_step_fn(self, fn: Callable, **kw) -> Callable:
+        return self.collector.observe_step_fn(fn, **kw)
+
+
+class Session:
+    def __init__(self, spec: Optional[MonitorSpec] = None):
+        self.spec = spec or MonitorSpec()
+        self._nodes: Dict[int, NodeHandle] = {}
+        self._active = False
+        self._report: Optional[MonitorReport] = None
+        self._sinks: List[sinks_mod.Sink] = []
+        self._backend = None
+        self.governor: Optional[Governor] = None
+        if self.off:
+            return
+        self._sinks = [sinks_mod.build_sink(s) for s in self.spec.sinks]
+        self._backend = detector_backend(self.spec.detector.backend,
+                                         self.spec.mode)(self.spec.detector)
+        if self.spec.governor:
+            self.governor = Governor()
+        if self.spec.mode == "stream":
+            # tee the wire transport into the sink pipeline
+            if any(s.wants_wire or s.wants_events for s in self._sinks):
+                self._backend.monitor.wire_tap = self._tap_wire
+
+    # -- basic properties -----------------------------------------------------
+    @property
+    def off(self) -> bool:
+        return self.spec.mode == "off"
+
+    @property
+    def detector(self):
+        return self._backend
+
+    @property
+    def collector(self) -> Optional[Collector]:
+        return None if self.off else self.node(0).collector
+
+    # -- fleet membership -----------------------------------------------------
+    def node(self, node_id: int = 0, ts_offset: float = 0.0) -> NodeHandle:
+        if self.off:
+            raise RuntimeError("mode 'off' sessions have no monitored nodes")
+        if node_id not in self._nodes:
+            probes = build_probes(self.spec.probes, self.spec.probe_options)
+            col = Collector(probes, self.spec.capacity)
+            handle = NodeHandle(self, node_id, col)
+            self._nodes[node_id] = handle
+            if self.spec.mode == "stream":
+                self._backend.register_node(node_id, col,
+                                            ts_offset=ts_offset)
+            if self._active:
+                col.attach()
+        return self._nodes[node_id]
+
+    # -- lifecycle ------------------------------------------------------------
+    @contextlib.contextmanager
+    def monitoring(self):
+        if self.off:
+            yield self
+            return
+        self.node(0)  # default node exists for observe_step_fn
+        for h in self._nodes.values():
+            h.collector.attach()
+        self._active = True
+        try:
+            yield self
+        finally:
+            try:
+                self._finalize()
+            finally:
+                self._active = False
+                for h in reversed(list(self._nodes.values())):
+                    h.collector.detach()
+
+    def observe_step_fn(self, fn: Callable, **kw) -> Callable:
+        """Wrap the node-0 step callable; identity when monitoring is off."""
+        if self.off:
+            return fn
+        return self.node(0).observe_step_fn(fn, **kw)
+
+    @contextlib.contextmanager
+    def _detection_pause(self):
+        """Detach python probes while detection runs. The profile hook fires
+        on every repro/jax call — including the detector's own EM fit —
+        which both poisons the python-layer features with monitor
+        self-observation and turns a seconds-long sweep into minutes."""
+        paused = [(h, p) for h in self._nodes.values()
+                  for p in h.collector.probes
+                  if p.name == "python" and p.attached]
+        for _, p in paused:
+            p.detach()
+        try:
+            yield
+        finally:
+            for h, p in paused:
+                p.attach(h.collector.buffer, t0=h.collector.t0)
+
+    # -- cadence --------------------------------------------------------------
+    def on_step(self, step: int) -> StepOutcome:
+        """Call once per training/serving step; the spec decides when this
+        flushes, fits, detects, and forms incidents."""
+        out = StepOutcome()
+        if self.off or step <= 0:
+            return out
+        det = self.spec.detector
+        if self.spec.mode == "stream":
+            if step % det.flush_every:
+                return out
+            if not self._backend.fitted:
+                out.warmed = self.warmup()
+                return out
+            n_closed = len(self._backend.closed)
+            with self._detection_pause():
+                out.detections = self._backend.update()
+            out.incidents = self._backend.closed[n_closed:]
+        else:  # batch: periodic snapshot sweep (fit on the clean prefix)
+            if step % det.sweep_every:
+                return out
+            events = self._snapshot_events()
+            train = [e for e in events if e.step < step - det.holdoff_steps]
+            if not train:
+                return out
+            with self._detection_pause():
+                self._backend.fit(train)
+                out.detections = self._backend.update(events)
+        if self.governor is not None and out.detections:
+            out.actions = self.governor.decide(out.detections)
+        return out
+
+    def warmup(self) -> List[Layer]:
+        """Streaming: fit baselines on the (assumed clean) data so far.
+        No-op in other modes (batch fits on its sweep cadence)."""
+        if self.off or self.spec.mode != "stream":
+            return []
+        with self._detection_pause():
+            return self._backend.fit()
+
+    def tick(self) -> List[Incident]:
+        """Streaming: one poll/detect/incident cycle, off-cadence."""
+        if self.off or self.spec.mode != "stream":
+            return []
+        n_closed = len(self._backend.closed)
+        with self._detection_pause():
+            self._backend.update()
+        return self._backend.closed[n_closed:]
+
+    # -- sinks ----------------------------------------------------------------
+    def _tap_wire(self, buf: bytes) -> None:
+        events: Optional[List[Event]] = None
+        for s in self._sinks:
+            if s.wants_wire:
+                s.on_wire(buf)
+            if s.wants_events:
+                if events is None:
+                    batch = wire.decode(buf)
+                    events = wire.columns_to_events(batch.columns)
+                    for e in events:  # per-node tracks, like export_trace
+                        e.pid = batch.node_id
+                s.on_events(events)
+
+    def _snapshot_events(self) -> List[Event]:
+        events: List[Event] = []
+        for h in self._nodes.values():
+            events.extend(h.collector.snapshot())
+        return events
+
+    # -- finalisation ---------------------------------------------------------
+    def _finalize(self) -> None:
+        incidents: List[Incident] = []
+        detections: Dict[Layer, Any] = {}
+        if self.spec.mode == "stream":
+            with self._detection_pause():
+                self._backend.finish()
+            incidents = self._backend.incidents  # ranked, all closed
+            detections = self._backend.flags()
+        else:
+            events: List[Event] = []
+            for h in self._nodes.values():
+                node_events = h.collector.drain()
+                for s in self._sinks:
+                    if s.wants_events:
+                        s.on_events(node_events)
+                    if s.wants_wire:
+                        s.on_wire(wire.encode_events(
+                            node_events, node_id=h.node_id, seq=0))
+                events.extend(node_events)
+            with self._detection_pause():
+                if events:
+                    # final refit on the full clean prefix: mid-run sweeps
+                    # may have fitted before slow layers reached min_events
+                    last = max(e.step for e in events)
+                    train = [
+                        e for e in events
+                        if e.step < last - self.spec.detector.holdoff_steps]
+                    self._backend.fit(train or events)
+                detections = self._backend.update(events)
+        overhead = {h.node_id: h.collector.overhead_stats()
+                    for h in self._nodes.values()}
+        if self.spec.mode == "stream":
+            overhead["stream"] = self._backend.monitor.stats()
+        report = MonitorReport.build(self.spec.mode, detections, incidents,
+                                     overhead, sink_outputs={})
+        for s in self._sinks:
+            path = s.close(report)
+            if path:
+                report.sink_outputs[s.kind] = path
+        self._report = report
+
+    def result(self) -> MonitorReport:
+        """The unified report. Final after `monitoring()` exits; an interim
+        snapshot (sinks left open) when called mid-run."""
+        if self._report is not None:
+            return self._report
+        if self.off:
+            return MonitorReport.build("off", {}, [], {}, {})
+        detections = self._backend.flags()
+        incidents = (self._backend.incidents
+                     if self.spec.mode == "stream" else [])
+        overhead = {h.node_id: h.collector.overhead_stats()
+                    for h in self._nodes.values()}
+        return MonitorReport.build(self.spec.mode, detections, incidents,
+                                   overhead, sink_outputs={})

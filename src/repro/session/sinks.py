@@ -1,0 +1,165 @@
+"""Sink pipeline: where a session's observations end up.
+
+A sink receives the session's event stream and/or raw wire batches while the
+session runs, and is closed with the final `MonitorReport`:
+
+    on_events(events) — decoded events (batch: one drain at finalise;
+                        stream: each node flush, already ts-rebased)
+    on_wire(buf)      — wire-encoded `EventBatch` bytes (stream transport;
+                        batch mode encodes the final drain per node)
+    close(report)     — flush and return the output path (or None)
+
+Builtin kinds: ``perfetto`` (trace viewer JSON), ``jsonl`` (one event per
+line), ``wire`` (length-prefixed wire batches, replayable through
+`wire.decode`), ``report`` (the unified MonitorReport as JSON, incidents
+included). Third-party sinks register with ``@register_sink("kind")`` and
+become addressable from `SinkSpec.kind`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+from typing import IO, List, Optional
+
+from repro.core.events import Event, export_perfetto
+from repro.session.registry import register_sink, sink_class
+from repro.session.spec import SinkSpec
+
+
+class Sink:
+    kind = "sink"
+    wants_events = False
+    wants_wire = False
+
+    def __init__(self, path: str = "", **options):
+        self.path = path
+        self.options = options
+
+    def on_events(self, events: List[Event]) -> None:
+        pass
+
+    def on_wire(self, buf: bytes) -> None:
+        pass
+
+    def close(self, report) -> Optional[str]:
+        return None
+
+
+def build_sink(spec: SinkSpec) -> Sink:
+    return sink_class(spec.kind)(path=spec.path, **spec.options)
+
+
+def _ensure_dir(path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+
+@register_sink("perfetto")
+class PerfettoSink(Sink):
+    """Accumulates the event stream; writes one Chrome-trace JSON at close.
+
+    Bounded: keeps the newest ``max_events`` (spec option; default 1M) so a
+    long streaming run cannot grow the trace buffer without limit — the
+    exported trace covers the tail of the run, like a flight recorder."""
+
+    kind = "perfetto"
+    wants_events = True
+
+    def __init__(self, path: str = "results/trace.json", **options):
+        super().__init__(path or "results/trace.json", **options)
+        self.max_events = int(options.get("max_events", 1_000_000))
+        self.events_dropped = 0
+        self._events: List[Event] = []
+
+    def on_events(self, events: List[Event]) -> None:
+        self._events.extend(events)
+        if len(self._events) > self.max_events:
+            self.events_dropped += len(self._events) - self.max_events
+            self._events = self._events[-self.max_events:]
+
+    def close(self, report) -> Optional[str]:
+        self._events.sort(key=lambda e: e.ts)
+        return export_perfetto(self._events, self.path)
+
+
+@register_sink("jsonl")
+class JsonlEventSink(Sink):
+    """Streams events as JSON lines (incremental; bounded memory)."""
+
+    kind = "jsonl"
+    wants_events = True
+
+    def __init__(self, path: str = "results/events.jsonl", **options):
+        super().__init__(path or "results/events.jsonl", **options)
+        self._f: Optional[IO[str]] = None
+        self.events_written = 0
+
+    def on_events(self, events: List[Event]) -> None:
+        if self._f is None:
+            _ensure_dir(self.path)
+            self._f = open(self.path, "w")
+        for e in events:
+            self._f.write(json.dumps(e.to_json()) + "\n")
+        self.events_written += len(events)
+
+    def close(self, report) -> Optional[str]:
+        if self._f is None:
+            return None
+        self._f.close()
+        self._f = None
+        return self.path
+
+
+@register_sink("wire")
+class WireSink(Sink):
+    """Length-prefixed wire batches — a replayable transport capture (each
+    frame decodes with `repro.stream.wire.decode`)."""
+
+    kind = "wire"
+    wants_wire = True
+
+    def __init__(self, path: str = "results/events.wire", **options):
+        super().__init__(path or "results/events.wire", **options)
+        self._f: Optional[IO[bytes]] = None
+        self.batches_written = 0
+
+    def on_wire(self, buf: bytes) -> None:
+        if self._f is None:
+            _ensure_dir(self.path)
+            self._f = open(self.path, "wb")
+        self._f.write(struct.pack("<I", len(buf)))
+        self._f.write(buf)
+        self.batches_written += 1
+
+    def close(self, report) -> Optional[str]:
+        if self._f is None:
+            return None
+        self._f.close()
+        self._f = None
+        return self.path
+
+
+@register_sink("report")
+class ReportSink(Sink):
+    """Writes the final unified MonitorReport (incidents included) as JSON."""
+
+    kind = "report"
+
+    def __init__(self, path: str = "results/monitor_report.json", **options):
+        super().__init__(path or "results/monitor_report.json", **options)
+
+    def close(self, report) -> Optional[str]:
+        return report.save(self.path)
+
+
+def read_wire_capture(path: str) -> List[bytes]:
+    """Inverse of WireSink: the captured frames, ready for `wire.decode`."""
+    frames: List[bytes] = []
+    with open(path, "rb") as f:
+        while True:
+            head = f.read(4)
+            if len(head) < 4:
+                break
+            (n,) = struct.unpack("<I", head)
+            frames.append(f.read(n))
+    return frames

@@ -23,11 +23,15 @@ examples/fleet_demo.py):
     ... at shutdown ...
     incidents += mon.finish()
     print(mon.render_report())
+
+Deprecated as a driver entry point: prefer `repro.session.Session` with a
+``MonitorSpec(mode="stream")`` — the session drives this class and folds its
+output into the unified `MonitorReport`.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -58,6 +62,9 @@ class StreamMonitor:
         self.ticks = 0
         self.detect_seconds = 0.0  # cumulative detection wall time
         self.last_detections: Dict[Layer, WindowDetection] = {}
+        # optional observer of every wire batch as it leaves an agent — the
+        # session sink pipeline tees the transport through this
+        self.wire_tap: Optional[Callable[[bytes], None]] = None
 
     # -- fleet membership -----------------------------------------------------
     def register_node(self, node_id: int, collector: Collector,
@@ -71,7 +78,10 @@ class StreamMonitor:
         """Flush every node agent through the wire into the aggregator."""
         added = 0
         for agent in self.agents.values():
-            added += self.aggregator.ingest(agent.flush())
+            buf = agent.flush()
+            if self.wire_tap is not None:
+                self.wire_tap(buf)
+            added += self.aggregator.ingest(buf)
         self.aggregator.evict()
         return added
 

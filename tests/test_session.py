@@ -1,0 +1,394 @@
+"""Session API: MonitorSpec round-trips (JSON / CLI args / env), probe
+registry registration + override, detector-backend parity with the old
+Collector.standard + FullStackMonitor flow, sinks, and the Session facade."""
+import argparse
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Collector, FullStackMonitor, Layer
+from repro.core.events import Event
+from repro.core.probes import Probe
+from repro.session import (BatchGMMBackend, DetectorSpec, MonitorSpec,
+                           Session, SinkSpec, build_probes, probe_names,
+                           read_wire_capture, register_probe)
+from repro.session import registry as registry_mod
+from repro.session.spec import SPEC_ENV_VAR
+from repro.stream import wire
+
+
+def _argparser() -> argparse.ArgumentParser:
+    """The monitor-relevant slice of the drivers' CLIs."""
+    ap = argparse.ArgumentParser()
+    MonitorSpec.add_cli_args(ap)
+    ap.add_argument("--monitor", action="store_true")
+    ap.add_argument("--stream-monitor", action="store_true")
+    ap.add_argument("--stream-flush-every", type=int, default=25)
+    ap.add_argument("--trace-out", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def _synth_events(n_steps=200, seed=0):
+    """Operator+step event stream with a latency fault in steps 120..160."""
+    rng = np.random.default_rng(seed)
+    evs = []
+    for s in range(n_steps):
+        t = 0.02 * s
+        slow = 10.0 if 120 <= s < 160 else 1.0
+        for j in range(4):
+            evs.append(Event(layer=Layer.OPERATOR, name=f"op{j}",
+                             ts=t + 1e-3 * j,
+                             dur=float(slow * 1e-4 * (j + 1)
+                                       * rng.lognormal(0, 0.05)),
+                             size=1e5 * (j + 1), step=s))
+        evs.append(Event(layer=Layer.STEP, name="train_step", ts=t,
+                         dur=float(slow * 5e-3 * rng.lognormal(0, 0.05)),
+                         step=s))
+    return evs
+
+
+# ---------------------------------------------------------------------------
+# MonitorSpec round-trips
+# ---------------------------------------------------------------------------
+
+def test_spec_json_round_trip():
+    spec = MonitorSpec(
+        mode="stream", probes=["operator", "step"],
+        probe_options={"device": {"interval": 0.01}},
+        detector=DetectorSpec(n_components=5, contamination=0.05,
+                              flush_every=10),
+        sinks=[SinkSpec(kind="perfetto", path="/tmp/t.json"),
+               SinkSpec(kind="report")],
+        governor=False, seed=3)
+    back = MonitorSpec.from_json(spec.to_json())
+    assert back == spec
+    # and through a file
+    assert MonitorSpec.from_dict(json.loads(spec.to_json(indent=2))) == spec
+
+
+def test_spec_rejects_unknown_fields_and_modes():
+    with pytest.raises(ValueError, match="unknown MonitorSpec field"):
+        MonitorSpec.from_dict({"mode": "batch", "probs": ["step"]})
+    with pytest.raises(ValueError, match="mode must be one of"):
+        MonitorSpec(mode="bogus")
+    with pytest.raises(ValueError, match="unknown DetectorSpec field"):
+        MonitorSpec.from_dict({"detector": {"n_comps": 2}})
+
+
+def test_spec_from_legacy_flags_round_trip():
+    args = _argparser().parse_args(
+        ["--stream-monitor", "--stream-flush-every", "10", "--seed", "7"])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        spec = MonitorSpec.from_args(args, env={})
+    assert spec.mode == "stream"
+    assert spec.detector.flush_every == 10
+    assert spec.seed == 7 and spec.detector.seed == 7
+    # from_args -> to_json -> from_json round-trips
+    assert MonitorSpec.from_json(spec.to_json()) == spec
+
+    args = _argparser().parse_args(["--monitor", "--trace-out", "/tmp/x.json"])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        spec = MonitorSpec.from_args(args, env={})
+    assert spec.mode == "batch"
+    assert [s.kind for s in spec.sinks] == ["perfetto"]
+    assert spec.sinks[0].path == "/tmp/x.json"
+
+    spec = MonitorSpec.from_args(_argparser().parse_args([]), env={})
+    assert spec.mode == "off"
+
+
+def test_spec_cli_and_env_sources(tmp_path):
+    ap = _argparser()
+    # inline JSON beats legacy flags
+    args = ap.parse_args(["--monitor-spec", '{"mode": "batch"}', "--monitor"])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        spec = MonitorSpec.from_args(args, env={})
+    assert spec.mode == "batch"
+    # file path
+    p = tmp_path / "spec.json"
+    p.write_text(json.dumps({"mode": "stream",
+                             "detector": {"flush_every": 5}}))
+    spec = MonitorSpec.from_args(ap.parse_args(["--monitor-spec", str(p)]),
+                                 env={})
+    assert spec.mode == "stream" and spec.detector.flush_every == 5
+    # env fallback
+    spec = MonitorSpec.from_args(ap.parse_args([]),
+                                 env={SPEC_ENV_VAR: '{"mode": "stream"}'})
+    assert spec.mode == "stream"
+    # bad source
+    with pytest.raises(FileNotFoundError):
+        MonitorSpec.parse("no/such/spec.json")
+
+
+def test_legacy_defaults_only_apply_to_legacy_path():
+    defaults = {"detector": {"min_events": 48}}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = MonitorSpec.from_args(
+            _argparser().parse_args(["--monitor"]), env={},
+            legacy_defaults=defaults)
+    assert legacy.detector.min_events == 48
+    explicit = MonitorSpec.from_args(
+        _argparser().parse_args(["--monitor-spec", '{"mode": "batch"}']),
+        env={}, legacy_defaults=defaults)
+    assert explicit.detector.min_events == DetectorSpec().min_events
+
+
+# ---------------------------------------------------------------------------
+# probe registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_standard_probes():
+    assert {"python", "xla", "operator", "collective", "device",
+            "step"} <= set(probe_names())
+
+
+def test_registry_registration_and_override():
+    class NullProbe(Probe):
+        name = "null"
+
+        def _attach(self):
+            pass
+
+        def _detach(self):
+            pass
+
+    try:
+        @register_probe("null")
+        def _null(opts, peers):
+            p = NullProbe()
+            p.tag = opts.get("tag", "")
+            return p
+
+        probes = build_probes(["null", "step"],
+                              {"null": {"tag": "hello"}})
+        assert probes[0].name == "null" and probes[0].tag == "hello"
+
+        # override: re-registering the same name wins
+        @register_probe("null")
+        def _null2(opts, peers):
+            p = NullProbe()
+            p.tag = "override"
+            return p
+
+        assert build_probes(["null"])[0].tag == "override"
+    finally:
+        registry_mod._PROBES.pop("null", None)
+
+
+def test_registry_unknown_probe_lists_available():
+    with pytest.raises(KeyError, match="available:.*operator"):
+        build_probes(["not_a_probe"])
+
+
+def test_collector_getitem_keyerror_lists_probes():
+    col = Collector.standard(with_python=False)
+    with pytest.raises(KeyError, match="available:.*'step'"):
+        col["nope"]
+
+
+def test_collector_standard_is_registry_shim():
+    """The deprecated constructor builds the same wired suite by name."""
+    col = Collector.standard(with_python=False, device_interval=0.125,
+                             n_devices=2, python_sampling=9)
+    assert [p.name for p in col.probes] == ["xla", "operator", "collective",
+                                            "device", "step"]
+    assert col["device"].interval == 0.125
+    assert len(col["device"].devices) == 2
+    step = col["step"]
+    assert step.operator_probe is col["operator"]
+    assert step.collective_probe is col["collective"]
+    assert step.device_probe is col["device"]
+    # step-counter wiring survives the registry path
+    step.step_count = 41
+    assert all(p.current_step() == 41 for p in col.probes)
+    col2 = Collector.standard(python_sampling=4, python_include=("repro",))
+    assert col2.probes[0].name == "python"
+    assert col2["python"].sample_every == 4
+    assert col2["python"].include == ("repro",)
+
+
+# ---------------------------------------------------------------------------
+# detector back-compat: old flow vs the session adapter
+# ---------------------------------------------------------------------------
+
+def test_batch_backend_matches_fullstackmonitor():
+    events = _synth_events()
+    clean = [e for e in events if e.step < 100]
+
+    old = FullStackMonitor(n_components=3, contamination=1 / 6,
+                           min_events=32).fit(clean)
+    old_results = old.detect(events)
+
+    backend = BatchGMMBackend(DetectorSpec(n_components=3, min_events=32))
+    backend.fit(clean)
+    new_results = backend.update(events)
+
+    assert set(old_results) == set(new_results) != set()
+    for layer in old_results:
+        np.testing.assert_array_equal(old_results[layer].flags,
+                                      new_results[layer].flags)
+        np.testing.assert_allclose(old_results[layer].scores,
+                                   new_results[layer].scores)
+        assert (old_results[layer].log_delta
+                == new_results[layer].log_delta)
+
+
+# ---------------------------------------------------------------------------
+# observe_step_fn misconfiguration is diagnosable (not silently swallowed)
+# ---------------------------------------------------------------------------
+
+def test_observe_step_fn_warns_on_probe_registration_failure():
+    col = Collector.standard(with_python=False)
+
+    class BadLowered:
+        def as_text(self):
+            raise RuntimeError("boom")
+
+    with pytest.warns(RuntimeWarning, match="collective.*register_compiled"):
+        col.observe_step_fn(lambda x: x, lowered=BadLowered())
+
+    with pytest.warns(RuntimeWarning, match="operator.*register_fn"):
+        # sample args that cannot be traced -> register_fn raises inside
+        col.observe_step_fn(lambda: None, sample_args=(object(),))
+
+
+def test_ring_buffer_read_under_python_probe_does_not_deadlock():
+    """Reading the buffer while the python probe is attached used to
+    deadlock: the profile hook fired on frames finishing inside the locked
+    region and its emit() -> push() re-entered the non-reentrant lock.
+    Subprocess + timeout so a regression fails instead of hanging the suite
+    (sys.setprofile is per-thread: the read must run on the hooked thread)."""
+    import subprocess
+    import sys as _sys
+
+    script = """
+import sys
+sys.path.insert(0, "src")
+from repro.core.events import Event, Layer, RingBuffer
+from repro.core.probes import PythonProbe
+rb = RingBuffer(100_000)
+for i in range(50_000):
+    rb.push(Event(layer=Layer.PYTHON, name=f"f{i % 7}", ts=float(i)))
+probe = PythonProbe(include=("repro",), sample_every=1)
+probe.attach(rb)
+snap = len(rb.snapshot())
+drained = len(rb.drain())
+probe.detach()
+assert snap >= 50_000 and drained >= snap, (snap, drained)
+print("OK", snap, drained)
+"""
+    out = subprocess.run([_sys.executable, "-c", script],
+                         capture_output=True, text=True, cwd=".", timeout=120)
+    assert out.returncode == 0, (out.stdout, out.stderr)
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Session facade
+# ---------------------------------------------------------------------------
+
+def test_session_off_mode_is_identity():
+    session = Session(MonitorSpec())
+
+    def fn(x):
+        return x
+
+    assert session.observe_step_fn(fn) is fn
+    with session.monitoring():
+        assert not session.on_step(10)
+    report = session.result()
+    assert report.mode == "off" and not report.layers
+
+
+def test_session_batch_end_to_end(tmp_path):
+    trace = tmp_path / "trace.json"
+    wire_path = tmp_path / "events.wire"
+    report_path = tmp_path / "report.json"
+    spec = MonitorSpec(
+        mode="batch",
+        probes=["xla", "operator", "collective", "device", "step"],
+        probe_options={"device": {"interval": 0.01}},
+        detector=DetectorSpec(min_events=16, sweep_every=20,
+                              holdoff_steps=5),
+        sinks=[SinkSpec("perfetto", str(trace)),
+               SinkSpec("wire", str(wire_path)),
+               SinkSpec("report", str(report_path))])
+    session = Session(spec)
+
+    @jax.jit
+    def step(x):
+        return jnp.sin(x) @ jnp.cos(x)
+
+    x = jnp.ones((16, 16))
+    saw_detections = False
+    with session.monitoring():
+        assert session.warmup() == []  # stream-only: no-op in batch mode
+        fn = session.observe_step_fn(step, sample_args=(x,))
+        for s in range(45):
+            x = fn(x)
+            out = session.on_step(s)
+            saw_detections |= bool(out.detections)
+    assert saw_detections
+    report = session.result()
+    assert report.mode == "batch"
+    assert Layer.STEP.value in report.layers
+    assert report.layers[Layer.STEP.value].events == 45
+    # sinks delivered
+    assert set(report.sink_outputs) == {"perfetto", "wire", "report"}
+    data = json.load(open(trace))
+    assert len(data["traceEvents"]) > 45
+    frames = read_wire_capture(str(wire_path))
+    assert sum(len(wire.decode(b)) for b in frames) == len(
+        data["traceEvents"])
+    saved = json.load(open(report_path))
+    assert saved["mode"] == "batch" and "step" in saved["layers"]
+
+
+def test_session_stream_multinode(tmp_path):
+    spec = MonitorSpec(
+        mode="stream",
+        probes=["operator", "step"],
+        detector=DetectorSpec(min_events=32, flush_every=8,
+                              incident_gap_s=10.0,
+                              incident_close_after_s=0.1, min_flags=4),
+        sinks=[SinkSpec("jsonl", str(tmp_path / "ev.jsonl"))],
+        governor=False)
+    session = Session(spec)
+
+    @jax.jit
+    def step(x):
+        return (x @ jnp.sin(x)) / jnp.maximum(jnp.abs(x).sum(), 1.0)
+
+    fns = {}
+    xs = {}
+    for nid in (0, 1):
+        node = session.node(nid)
+        xs[nid] = jnp.ones((32, 32)) * (1 + nid)
+        fns[nid] = node.observe_step_fn(step, sample_args=(xs[nid],))
+    with session.monitoring():
+        for s in range(24):
+            for nid in (0, 1):
+                xs[nid] = fns[nid](xs[nid])
+        assert session.warmup()
+        for s in range(24):
+            for nid in (0, 1):
+                xs[nid] = fns[nid](xs[nid])
+            session.on_step(s)
+    report = session.result()
+    assert report.mode == "stream"
+    assert Layer.OPERATOR.value in report.layers
+    # both node collectors flowed through the wire into the jsonl sink
+    lines = [json.loads(l) for l in open(tmp_path / "ev.jsonl")]
+    assert {l["pid"] for l in lines} == {0, 1}
+    assert report.sink_outputs["jsonl"].endswith("ev.jsonl")
+    # stream overhead block is carried alongside per-node stats
+    assert report.overhead["stream"]["aggregator"]["nodes"] == 2
