@@ -19,7 +19,7 @@ def main() -> None:
                     help="shorter sessions (CI-speed)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig2,fig3,fig4,table1,"
-                         "table2,fig5,stream,session,kernels")
+                         "table2,fig5,stream,session,kernels,eval")
     args = ap.parse_args()
     n = 120 if args.quick else 300
     only = set(args.only.split(",")) if args.only else None
@@ -88,6 +88,27 @@ def main() -> None:
         record("session_bench", time.time() - t0,
                f"batch_overhead={out['overhead_batch_pct']:+.1f}pct "
                f"stream_overhead={out['overhead_stream_pct']:+.1f}pct")
+    if want("eval"):
+        # detection quality as a benchmarked artifact: the smoke scenarios
+        # through both session modes (full matrix: repro.launch.evaluate)
+        import numpy as np
+        from repro.core.chaos import SMOKE_SCENARIOS
+        from repro.eval import run_matrix, save_matrix
+        from repro.eval.matrix import clean_control_far
+
+        t0 = time.time()
+        # floor at 200 steps even under --quick: an 80-step clean reference
+        # is where the detectors' thresholds stop being meaningful, and a
+        # garbage quality number is worse than a slower benchmark
+        matrix = run_matrix(SMOKE_SCENARIOS, n_steps=200 if args.quick
+                            else 240)
+        save_matrix(matrix, "results/eval")
+        f1s = [r["metrics"]["f1"] for r in matrix["rows"]
+               if r["metrics"]["faults_total"]]
+        far = clean_control_far(matrix)
+        record("eval_matrix", time.time() - t0,
+               f"smoke_mean_f1={100 * np.mean(f1s):.1f} "
+               f"clean_far={'n/a' if far is None else f'{100 * far:.1f}pct'}")
     if want("kernels"):
         from benchmarks import kernel_bench
         t0 = time.time()

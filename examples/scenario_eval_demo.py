@@ -1,0 +1,47 @@
+"""Scenario-evaluation tour: one labelled chaos scenario through both
+session modes, showing how the eval harness scores what the fault-injection
+demo only eyeballs — precision/recall/F1, time-to-detect, and (stream mode)
+whether the incident engine localised the injected fault windows.
+
+    PYTHONPATH=src python examples/scenario_eval_demo.py [scenario]
+
+Default scenario: comm_slowdown (chaosblade-style network delay). The full
+matrix is `python -m repro.launch.evaluate --scenarios all`; methodology in
+docs/evaluation.md.
+"""
+import sys
+
+from repro.core.chaos import get_scenario, scenario_names
+from repro.eval import run_scenario
+
+name = sys.argv[1] if len(sys.argv) > 1 else "comm_slowdown"
+scenario = get_scenario(name)
+print(f"scenario {scenario.name!r}: {scenario.description}")
+print(f"  fault kinds: {list(scenario.kinds) or 'none (clean control)'}; "
+      f"workload: {scenario.workload}")
+print(f"  (available: {', '.join(scenario_names())})\n")
+
+for mode in ("batch", "stream"):
+    run = run_scenario(scenario, mode, n_steps=200)
+    m = run.metrics()
+    print(f"=== {mode} mode ({run.wall_s:.1f}s) ===")
+    print(f"  fault windows: {run.windows} "
+          f"({int(run.labels.sum())} anomalous steps)")
+    print(f"  precision={100 * m.precision:.1f}% "
+          f"recall={100 * m.recall:.1f}% F1={100 * m.f1:.1f}% "
+          f"false_alarms={100 * m.false_alarm_rate:.1f}%")
+    if m.faults_total:
+        ttd = f"{m.ttd_steps:.1f} steps" if m.ttd_steps is not None else "n/a"
+        print(f"  faults detected: {m.faults_detected}/{m.faults_total}, "
+              f"mean time-to-detect {ttd}")
+    flagged = {name: ls.anomaly_rate
+               for name, ls in sorted(run.report.layers.items())
+               if ls.anomaly_rate > 0}
+    print(f"  per-layer anomaly rates: "
+          f"{ {k: round(v, 3) for k, v in flagged.items()} }")
+    im = run.incident_match()
+    if im is not None:
+        print(f"  incidents: {len(run.report.incidents)} "
+              f"(window recall {100 * im.recall:.0f}%, "
+              f"{len(im.spurious)} spurious)")
+    print()

@@ -10,5 +10,7 @@ from repro.core.events import Event, Layer, RingBuffer, export_perfetto  # noqa:
 from repro.core.collector import Collector  # noqa: F401
 from repro.core.detector import DetectionResult, FullStackMonitor, GMMDetector  # noqa: F401
 from repro.core.gmm import GMM, GMMParams, fit_gmm, score_samples, detect_anomalies  # noqa: F401
-from repro.core.chaos import Fault, FaultInjector  # noqa: F401
+from repro.core.chaos import (Fault, FaultInjector, Scenario,  # noqa: F401
+                              get_scenario, register_scenario,
+                              scenario_names)
 from repro.core.governor import Action, Governor  # noqa: F401

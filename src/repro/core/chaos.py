@@ -1,41 +1,72 @@
 """Fault injection — the pytorchfi / DCGM-error-injection / chaosblade analogue
 (paper §V): schedule labelled faults against a monitored run.
 
-Fault kinds and the probe hook they perturb (paper §V fault matrix):
+Fault kinds, the probe hook they perturb (paper §V fault matrix), and the
+unit of ``Fault.magnitude`` for each:
 
 * ``python_latency`` — host-side stalls (GIL/input pipeline): StepProbe.extra_latency
-                       (a REAL time.sleep — the python probe observes it live)
-* ``op_latency``     — operator/software delays (pytorchfi): StepProbe.extra_op
+                       (a REAL time.sleep — the python probe observes it live).
+                       magnitude: seconds added per step.
+* ``op_latency``     — operator/software delays (pytorchfi): StepProbe.extra_op.
+                       magnitude: seconds added per step.
 * ``xla_latency``    — runtime/kernel-level slowdowns (DCGM kernel timeout):
-                       StepProbe.extra_xla (inflates the executable_run events)
+                       StepProbe.extra_xla (inflates the executable_run events).
+                       magnitude: seconds added per step.
 * ``hw_contention``  — co-scheduled processes stealing the device (paper §V-C):
-                       TpuTelemetryModel.contention / mem_leak_gb
-* ``net_latency``    — chaosblade network delay: CollectiveProbe.comm_scale
-* ``packet_loss``    — chaosblade loss: CollectiveProbe.drop_prob
+                       TpuTelemetryModel.contention.
+                       magnitude: fraction of the device stolen, clipped to 0..1.
+* ``mem_leak``       — monotone device-memory growth: TpuTelemetryModel
+                       .mem_leak_gb ramps while the fault is active.
+                       magnitude: GB leaked per active step (leak at step s =
+                       magnitude * (s - start_step + 1), reset when inactive).
+* ``net_latency``    — chaosblade network delay: CollectiveProbe.comm_scale.
+                       magnitude: multiplicative latency scale (>= 1 slows).
+* ``packet_loss``    — chaosblade loss: CollectiveProbe.drop_prob.
+                       magnitude: per-message drop probability, clipped to 0..0.9.
 
-Ground truth: every step inside an active fault window is labelled anomalous,
-giving the ~5:1 normal:anomalous dataset of the paper.
+Ground truth: every step inside an active fault window is labelled anomalous
+(overlapping windows OR together), giving the ~5:1 normal:anomalous dataset
+of the paper. `Scenario` packages named, deterministic fault schedules (the
+evaluation harness's unit of work — see ``repro.eval`` and
+``docs/evaluation.md``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 
 @dataclasses.dataclass
 class Fault:
-    kind: str  # op_latency | xla_latency | hw_contention | net_latency | packet_loss
+    # python_latency | op_latency | xla_latency | hw_contention | mem_leak |
+    # net_latency | packet_loss
+    kind: str
     start_step: int
     end_step: int
-    magnitude: float  # seconds (latency), 0-1 (contention), scale (net), prob (loss)
+    # units by kind (see module docstring): seconds (latency kinds),
+    # 0-1 fraction (hw_contention), GB/step (mem_leak), scale (net_latency),
+    # probability (packet_loss)
+    magnitude: float
 
     def active(self, step: int) -> bool:
         return self.start_step <= step < self.end_step
 
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
 
 LATENCY_KINDS = ("python_latency", "op_latency", "xla_latency")
+DEVICE_KINDS = ("hw_contention", "mem_leak")
+NETWORK_KINDS = ("net_latency", "packet_loss")
+ALL_KINDS = LATENCY_KINDS + DEVICE_KINDS + NETWORK_KINDS
+
+# per-kind default magnitudes, in each kind's own unit (module docstring)
+DEFAULT_MAGNITUDES = {"op_latency": 0.05, "xla_latency": 0.03,
+                      "python_latency": 0.04, "hw_contention": 0.5,
+                      "mem_leak": 0.25, "net_latency": 4.0,
+                      "packet_loss": 0.3}
 
 
 class FaultInjector:
@@ -52,9 +83,7 @@ class FaultInjector:
                         ) -> "FaultInjector":
         """Poisson-ish fault bursts covering ~anomaly_fraction of steps."""
         rng = np.random.default_rng(seed)
-        mags = {"op_latency": 0.05, "xla_latency": 0.03,
-                "python_latency": 0.04, "hw_contention": 0.5,
-                "net_latency": 4.0, "packet_loss": 0.3}
+        mags = dict(DEFAULT_MAGNITUDES)
         mags.update(magnitudes or {})
         n_burst_steps = int(n_steps * anomaly_fraction)
         n_bursts = max(1, n_burst_steps // burst)
@@ -68,10 +97,29 @@ class FaultInjector:
         return FaultInjector(faults)
 
     def labels(self, n_steps: int) -> np.ndarray:
+        """Per-step ground truth: True where ANY fault window is active
+        (overlapping windows OR together; windows are clipped to
+        ``[0, n_steps)``)."""
         y = np.zeros(n_steps, dtype=bool)
         for f in self.faults:
-            y[f.start_step: f.end_step] = True
+            y[max(f.start_step, 0): max(f.end_step, 0)] = True
         return y
+
+    def windows(self) -> List[Tuple[int, int]]:
+        """Merged ``[start, end)`` step windows, sorted — the fault-level
+        ground truth used for time-to-detect and incident matching
+        (overlapping/adjacent faults collapse into one window)."""
+        spans = sorted((f.start_step, f.end_step) for f in self.faults)
+        merged: List[Tuple[int, int]] = []
+        for lo, hi in spans:
+            if merged and lo <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], hi))
+            else:
+                merged.append((lo, hi))
+        return merged
+
+    def to_json(self) -> List[Dict[str, object]]:
+        return [f.to_json() for f in self.faults]
 
     def apply(self, step: int, collector) -> List[Fault]:
         """Set probe perturbations for this step; returns active faults.
@@ -108,8 +156,13 @@ class FaultInjector:
                                                0.9))
         cont = max((min(mag(f), 1.0) for f in active
                     if f.kind == "hw_contention"), default=0.0)
+        # mem_leak ramps deterministically: magnitude GB per active step, no
+        # jitter — a leak is monotone growth, not scatter
+        leak = sum(f.magnitude * (step - f.start_step + 1) for f in active
+                   if f.kind == "mem_leak")
         for dev in dev_probe.devices:
             dev.contention = cont
+            dev.mem_leak_gb = leak
         return active
 
     def clear(self, collector) -> None:
@@ -120,3 +173,133 @@ class FaultInjector:
         collector["collective"].drop_prob = 0.0
         for dev in collector["device"].devices:
             dev.contention = 0.0
+            dev.mem_leak_gb = 0.0
+
+
+# ---------------------------------------------------------------------------
+# Scenario library: named, ground-truth-labelled fault campaigns
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named evaluation scenario: a deterministic fault schedule plus the
+    workload shape it runs against.
+
+    The schedule is a function of ``n_steps`` only: ``n_bursts`` equal-length
+    bursts of the scenario's fault kinds, evenly spaced through the live
+    region (everything after ``clean_fraction`` of the run, which detection
+    uses as its clean reference window). Magnitudes still get the injector's
+    per-step heavy-tailed jitter at apply time, but the *windows* — the
+    ground-truth labels — are reproducible from the scenario name alone.
+    """
+
+    name: str
+    description: str
+    kinds: Tuple[str, ...]  # empty = clean control (no faults)
+    workload: str = "train"  # train | serve
+    expected_layers: Tuple[str, ...] = ()  # layer values expected to flag
+    clean_fraction: float = 0.4
+    n_bursts: int = 3
+    burst_fraction: float = 0.06  # burst length as a fraction of the run
+    magnitudes: Optional[Dict[str, float]] = None
+
+    def build_faults(self, n_steps: int) -> List[Fault]:
+        """The deterministic schedule: kinds cycle across evenly spaced
+        bursts (a mixed-fault scenario exercises each kind in turn)."""
+        if not self.kinds:
+            return []
+        mags = dict(DEFAULT_MAGNITUDES)
+        mags.update(self.magnitudes or {})
+        live_lo = int(n_steps * self.clean_fraction)
+        burst = max(2, int(n_steps * self.burst_fraction))
+        gap = (n_steps - live_lo) // self.n_bursts
+        faults = []
+        for i in range(self.n_bursts):
+            start = live_lo + i * gap + max(1, (gap - burst) // 2)
+            kind = self.kinds[i % len(self.kinds)]
+            faults.append(Fault(kind, start, min(start + burst, n_steps),
+                                mags[kind]))
+        return faults
+
+    def injector(self, n_steps: int) -> FaultInjector:
+        return FaultInjector(self.build_faults(n_steps))
+
+
+_SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register_scenario(scenario: Scenario) -> Scenario:
+    """Add (or override) a scenario in the registry, by name."""
+    _SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def scenario_names() -> List[str]:
+    return sorted(_SCENARIOS)
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"no scenario registered under {name!r}; "
+                       f"available: {', '.join(scenario_names())}") from None
+
+
+# the builtin matrix: one scenario per paper fault family (train path), a
+# mixed campaign, a clean control, and a serve-path variant of each kind that
+# perturbs the decode loop (network faults need a collective schedule, which
+# the single-host serve path does not run)
+BUILTIN_SCENARIOS = [
+    Scenario("clean_control",
+             "no faults — measures the false-alarm floor",
+             kinds=()),
+    Scenario("latency_spike",
+             "operator/software delay bursts (pytorchfi analogue)",
+             kinds=("op_latency",), expected_layers=("operator", "step")),
+    Scenario("runtime_stall",
+             "runtime/kernel-level stalls (DCGM kernel-timeout analogue)",
+             kinds=("xla_latency",), expected_layers=("xla", "step")),
+    Scenario("straggler_host",
+             "host-side stalls: GIL/input pipeline (real sleeps)",
+             kinds=("python_latency",), expected_layers=("step",)),
+    Scenario("degraded_device",
+             "co-scheduled process steals the device (contention)",
+             kinds=("hw_contention",), expected_layers=("device",)),
+    Scenario("memory_leak",
+             "device memory ramps while the fault is active",
+             kinds=("mem_leak",), expected_layers=("device",),
+             burst_fraction=0.1, n_bursts=2),
+    Scenario("comm_slowdown",
+             "network delay scales collective latencies (chaosblade delay)",
+             kinds=("net_latency",), expected_layers=("collective", "step")),
+    Scenario("packet_loss",
+             "per-message drop probability inflates retransmits",
+             kinds=("packet_loss",), expected_layers=("collective",),
+             # the hardest scenario by construction: loss only perturbs the
+             # dropped messages, so the per-step majority vote needs roughly
+             # half the schedule retransmitting to trip
+             magnitudes={"packet_loss": 0.45}),
+    Scenario("mixed_fault",
+             "operator, network, and device faults in one campaign",
+             kinds=("op_latency", "net_latency", "hw_contention"),
+             n_bursts=6,
+             expected_layers=("operator", "collective", "device", "step")),
+    Scenario("serve_latency_spike",
+             "operator delay bursts against the decode loop",
+             kinds=("op_latency",), workload="serve",
+             expected_layers=("operator", "step")),
+    Scenario("serve_runtime_stall",
+             "kernel stalls against the decode loop",
+             kinds=("xla_latency",), workload="serve",
+             expected_layers=("xla", "step")),
+    Scenario("serve_degraded_device",
+             "device contention while serving",
+             kinds=("hw_contention",), workload="serve",
+             expected_layers=("device",)),
+]
+for _s in BUILTIN_SCENARIOS:
+    register_scenario(_s)
+
+# the CI subset: fast, covers clean + a latency and a network fault
+SMOKE_SCENARIOS = ("clean_control", "latency_spike", "comm_slowdown")

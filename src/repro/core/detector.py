@@ -26,6 +26,9 @@ class DetectionResult:
     scores: np.ndarray  # (N,) best-component log density
     log_delta: float
     steps: np.ndarray  # (N,) step ids
+    # (N,) event timestamps (seconds, collector clock); None when the feature
+    # pipeline did not carry them. Lets callers measure time-to-detect.
+    ts: Optional[np.ndarray] = None
 
     @property
     def anomaly_rate(self) -> float:
@@ -101,5 +104,5 @@ class FullStackMonitor:
             scores = det.score(fs.X)
             out[layer] = DetectionResult(
                 layer=layer, flags=scores < det.log_delta, scores=scores,
-                log_delta=det.log_delta, steps=fs.steps)
+                log_delta=det.log_delta, steps=fs.steps, ts=fs.ts)
         return out

@@ -24,6 +24,9 @@ class FeatureSet:
     steps: np.ndarray  # (N,) step id per row (-1 when unknown)
     names: List[str]  # feature names
     event_names: np.ndarray  # (N,) source event name
+    # (N,) source event timestamps (seconds, collector clock); carried so
+    # detection results can report WHEN a flag fired, not just at which step
+    ts: Optional[np.ndarray] = None
 
 
 def _gaps(ts: np.ndarray, names: np.ndarray) -> np.ndarray:
@@ -58,7 +61,7 @@ def build_features(events: List[Event], layer: Layer) -> Optional[FeatureSet]:
             return None
         return FeatureSet(layer, np.array(rows, dtype=np.float64),
                           steps[kept], ["util", "mem_gb", "power_w", "temp_c"],
-                          names[kept])
+                          names[kept], ts=ts[kept])
 
     dur = np.array([e.dur for e in evs])
     size = np.array([e.size for e in evs])
@@ -77,13 +80,13 @@ def build_features(events: List[Event], layer: Layer) -> Optional[FeatureSet]:
         X = np.stack([log_dur, rel, np.log1p(size), np.log1p(bw)], 1)
         return FeatureSet(layer, X, steps,
                           ["log_lat_us", "rel_dur", "log_bytes", "log_bw"],
-                          names)
+                          names, ts=ts)
     # NOTE: inter-arrival gaps and name-frequency features are deliberately
     # excluded: they are window-relative, so a detector fitted on a clean
     # window systematically mis-scores a window with holes (see tests).
     X = np.stack([log_dur, rel, np.log1p(size)], 1)
     return FeatureSet(layer, X, steps,
-                      ["log_dur_us", "rel_dur", "log_bytes"], names)
+                      ["log_dur_us", "rel_dur", "log_bytes"], names, ts=ts)
 
 
 class LayerFeaturizer:
@@ -118,7 +121,8 @@ class LayerFeaturizer:
                          for n in fs.event_names])
         X = fs.X.copy()
         X[:, 1] = fs.X[:, 0] - base  # rel_dur vs the FITTED baseline
-        return FeatureSet(fs.layer, X, fs.steps, fs.names, fs.event_names)
+        return FeatureSet(fs.layer, X, fs.steps, fs.names, fs.event_names,
+                          ts=fs.ts)
 
     def fit_transform(self, events: List[Event]) -> Optional[FeatureSet]:
         if self.fit(events) is None:

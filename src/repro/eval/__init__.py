@@ -1,0 +1,23 @@
+"""Scenario-matrix evaluation: scores the monitoring stack against chaos
+ground truth (paper §V, Table-I-style results for THIS repo's detectors).
+
+The subsystem closes the loop between fault injection (`repro.core.chaos`
+scenarios) and detection (`repro.session.Session`):
+
+    scenario --FaultInjector--> monitored run --MonitorReport-->
+        step predictions --metrics--> precision/recall/F1, time-to-detect,
+        false-alarm rate --matrix--> scenario_matrix.json + leaderboard.md
+
+Entry points:
+    python -m repro.launch.evaluate --scenarios all --out results/eval/
+    run_matrix(...)                       # library use
+    run_scenario(scenario, mode, config)  # one cell
+
+See docs/evaluation.md for the methodology and the documented false-alarm
+ceiling of the clean-control scenario.
+"""
+from repro.eval.metrics import (DetectionMetrics, debounce,  # noqa: F401
+                                detection_metrics, step_predictions)
+from repro.eval.runner import EvalConfig, ScenarioRun, run_scenario  # noqa: F401
+from repro.eval.matrix import (CONFIG_GRID, FAR_CEILING,  # noqa: F401
+                               render_leaderboard, run_matrix, save_matrix)

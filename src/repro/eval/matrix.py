@@ -1,0 +1,163 @@
+"""The scenario matrix: scenarios x modes x detector configs -> artifacts.
+
+`run_matrix` executes every requested cell through `run_scenario` and
+returns one machine-readable dict; `save_matrix` writes it as
+``scenario_matrix.json`` next to a rendered ``leaderboard.md``. CI runs the
+smoke subset and holds the clean-control scenario's false-alarm rate below
+`FAR_CEILING` — the detection-quality analogue of a perf-regression gate.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.core.chaos import get_scenario
+from repro.eval.runner import EvalConfig, run_scenario
+
+# documented false-alarm ceiling for the clean-control scenario (step-level
+# false-alarm rate over the live region, either mode) — see
+# docs/evaluation.md#false-alarm-ceiling before changing it. Typical runs
+# sit at 0-8%; the ceiling leaves room for host timing noise (the latency
+# layers measure REAL wall time, and CI machines have noisy neighbours).
+FAR_CEILING = 0.15
+
+MODES = ("batch", "stream")
+
+# the named config axis: detector variants the matrix sweeps. "default" is
+# the tuned operating point; the rest move one knob each (components K,
+# window width, warm-start) so regressions are attributable.
+CONFIG_GRID: Dict[str, EvalConfig] = {
+    c.name: c for c in (
+        EvalConfig(name="default"),
+        EvalConfig(name="k2", n_components=2),
+        EvalConfig(name="k5", n_components=5),
+        EvalConfig(name="wide_window", flush_every=40, sweep_every=120),
+        EvalConfig(name="narrow_window", flush_every=10, sweep_every=30),
+        EvalConfig(name="no_warm_start", warm_start=False),
+    )
+}
+
+
+def run_matrix(scenarios: Sequence[str], modes: Sequence[str] = MODES,
+               configs: Sequence[str] = ("default",), n_steps: int = 240,
+               seed: int = 0, progress=None) -> Dict[str, object]:
+    """Run every (scenario, mode, config) cell; returns the matrix dict."""
+    rows: List[Dict[str, object]] = []
+    for name in scenarios:
+        scenario = get_scenario(name)
+        for mode in modes:
+            for cname in configs:
+                cfg = CONFIG_GRID[cname] if isinstance(cname, str) else cname
+                run = run_scenario(scenario, mode, cfg, n_steps=n_steps,
+                                   seed=seed)
+                row = _row(run)
+                rows.append(row)
+                if progress is not None:
+                    progress(row)
+    return {
+        "n_steps": n_steps,
+        "seed": seed,
+        "modes": list(modes),
+        "configs": {c: _config_json(CONFIG_GRID[c]) for c in configs
+                    if isinstance(c, str) and c in CONFIG_GRID},
+        "far_ceiling": FAR_CEILING,
+        "rows": rows,
+    }
+
+
+def _config_json(cfg: EvalConfig) -> Dict[str, object]:
+    import dataclasses
+
+    return dataclasses.asdict(cfg)
+
+
+def _row(run) -> Dict[str, object]:
+    m = run.metrics()
+    row: Dict[str, object] = {
+        "scenario": run.scenario.name,
+        "workload": run.scenario.workload,
+        "kinds": list(run.scenario.kinds),
+        "expected_layers": list(run.scenario.expected_layers),
+        "mode": run.mode,
+        "config": run.config.name,
+        "eval_start": run.eval_start,
+        "fault_windows": [list(w) for w in run.windows],
+        "metrics": m.to_json(),
+        "layers": {name: {"anomaly_rate": ls.anomaly_rate,
+                          "events": ls.events,
+                          "first_flag_ts": ls.first_flag_ts}
+                   for name, ls in run.report.layers.items()},
+        "wall_s": round(run.wall_s, 2),
+    }
+    im = run.incident_match()
+    if im is not None:
+        row["incidents"] = {"count": len(run.report.incidents),
+                            **im.to_json()}
+    return row
+
+
+def clean_control_far(matrix: Dict[str, object]) -> Optional[float]:
+    """Worst clean-control false-alarm rate across modes/configs (None when
+    the scenario was not part of the matrix)."""
+    fars = [r["metrics"]["false_alarm_rate"] for r in matrix["rows"]
+            if r["scenario"] == "clean_control"]
+    return max(fars) if fars else None
+
+
+# -- rendering ----------------------------------------------------------------
+
+def _fmt(x, pct: bool = False) -> str:
+    if x is None:
+        return "—"
+    return f"{100 * x:.1f}%" if pct else f"{x:.1f}"
+
+
+def render_leaderboard(matrix: Dict[str, object]) -> str:
+    """The scenario matrix as a markdown leaderboard (one row per cell)."""
+    lines = [
+        "# Scenario-matrix leaderboard",
+        "",
+        f"{matrix['n_steps']} steps/run, seed {matrix['seed']}; metrics are "
+        "step-level over the live region (see docs/evaluation.md). "
+        f"Clean-control false-alarm ceiling: {100 * matrix['far_ceiling']:.0f}%.",
+        "",
+        "| scenario | workload | mode | config | precision | recall | F1 "
+        "| FAR | TTD (steps) | faults hit |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    rows = sorted(matrix["rows"],
+                  key=lambda r: (r["scenario"], r["mode"], r["config"]))
+    for r in rows:
+        m = r["metrics"]
+        faulty = bool(m["faults_total"])
+        faults = (f"{m['faults_detected']}/{m['faults_total']}"
+                  if faulty else "—")
+        # P/R/F1 are vacuous without labelled-anomalous steps: FAR is the
+        # clean-control scenario's headline number
+        prf = [_fmt(m[k] if faulty else None, pct=True)
+               for k in ("precision", "recall", "f1")]
+        lines.append(
+            f"| {r['scenario']} | {r['workload']} | {r['mode']} "
+            f"| {r['config']} | {prf[0]} | {prf[1]} | {prf[2]} "
+            f"| {_fmt(m['false_alarm_rate'], pct=True)} "
+            f"| {_fmt(m['ttd_steps'])} | {faults} |")
+    far = clean_control_far(matrix)
+    if far is not None:
+        verdict = "PASS" if far < matrix["far_ceiling"] else "FAIL"
+        lines += ["", f"Clean-control FAR: {100 * far:.1f}% "
+                      f"(ceiling {100 * matrix['far_ceiling']:.0f}%) — "
+                      f"**{verdict}**"]
+    return "\n".join(lines) + "\n"
+
+
+def save_matrix(matrix: Dict[str, object], out_dir: str) -> Dict[str, str]:
+    """Write scenario_matrix.json + leaderboard.md under ``out_dir``."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {"matrix": os.path.join(out_dir, "scenario_matrix.json"),
+             "leaderboard": os.path.join(out_dir, "leaderboard.md")}
+    with open(paths["matrix"], "w") as f:
+        json.dump(matrix, f, indent=1, default=float)
+    with open(paths["leaderboard"], "w") as f:
+        f.write(render_leaderboard(matrix))
+    return paths

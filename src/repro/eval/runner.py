@@ -1,0 +1,233 @@
+"""Run one labelled scenario through the Session API and keep the evidence.
+
+Each cell of the scenario matrix is one monitored run:
+
+    scenario (chaos schedule) x mode (batch | stream) x EvalConfig (detector)
+
+Two workload shapes, both observed through `Session.observe_step_fn` (the
+zero-instrumentation contract — the step code never changes):
+
+* ``train``: a jitted synthetic train step plus a registered all-reduce
+  schedule, so every probe layer produces events. Cheap enough that the full
+  matrix runs on a laptop CPU; the detectors only see probe events, so
+  detection quality is workload-size-independent (the faults are injected at
+  the probe hooks, exactly as in the paper's testbed).
+* ``serve``: the real reduced-GPT-2 decode loop (`repro.serve.engine`), one
+  monitored step per generated token.
+
+The run's first ``clean_fraction`` steps are fault-free by scenario
+construction; stream mode warms up there, batch mode gets a matching holdoff
+so its final refit trains on the same clean prefix. Metrics are scored only
+on the live region after it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chaos import Scenario
+from repro.eval.metrics import (DetectionMetrics, debounce,
+                                detection_metrics, step_predictions)
+from repro.session import DetectorSpec, MonitorSpec, Session
+from repro.session.report import MonitorReport
+from repro.stream.incidents import IncidentMatch, match_incidents
+
+EVAL_PROBES = ["xla", "operator", "collective", "device", "step"]
+
+# a GPT-2-class DP all-reduce schedule for the synthetic workload (message
+# sizes in the gradient-bucket range), so the collective probe has traffic
+_FAKE_HLO = "\n".join(
+    f"  %ar{i} = f32[{1 << (12 + i)}]{{0}} all-reduce(%g{i}), "
+    "replica_groups={}" for i in range(8))
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalConfig:
+    """One detector configuration of the matrix (spec fields + scoring)."""
+
+    name: str = "default"
+    n_components: int = 3
+    contamination: float = 0.02
+    min_events: int = 32
+    warm_start: bool = True
+    sweep_every: int = 60     # batch refit cadence
+    flush_every: int = 20     # stream tick cadence ("window" step width)
+    horizon_s: float = 300.0  # stream sliding-window span
+    device_interval: float = 0.005
+    step_sleep: float = 0.002  # host pacing so device telemetry accumulates
+    vote: float = 0.5          # per-layer per-step majority-vote fraction
+    min_run: int = 3           # debounce: required consecutive flagged steps
+    grace_steps: int = 20      # detection-lag allowance for time-to-detect
+
+    def detector_spec(self, holdoff_steps: int, seed: int) -> DetectorSpec:
+        return DetectorSpec(
+            n_components=self.n_components,
+            contamination=self.contamination,
+            min_events=self.min_events, seed=seed,
+            sweep_every=self.sweep_every, holdoff_steps=holdoff_steps,
+            warm_start=self.warm_start, flush_every=self.flush_every,
+            horizon_s=self.horizon_s,
+            # synthetic runs compress a "fleet minute" into ~1 wall second,
+            # so incident clustering runs at a matching time scale
+            incident_gap_s=0.25, incident_close_after_s=0.25, min_flags=5)
+
+
+@dataclasses.dataclass
+class ScenarioRun:
+    """One matrix cell: the report plus everything needed to score it."""
+
+    scenario: Scenario
+    mode: str
+    config: EvalConfig
+    n_steps: int
+    eval_start: int
+    labels: np.ndarray
+    windows: List[Tuple[int, int]]
+    step_ts: np.ndarray
+    report: MonitorReport
+    wall_s: float
+
+    def predictions(self) -> Dict[str, np.ndarray]:
+        return step_predictions(self.report.detections, self.n_steps,
+                                vote=self.config.vote)
+
+    def metrics(self) -> DetectionMetrics:
+        pred = debounce(self.predictions()["any"], self.config.min_run)
+        return detection_metrics(
+            pred, self.labels, self.windows,
+            eval_start=self.eval_start, grace_steps=self.config.grace_steps,
+            step_ts=self.step_ts)
+
+    def incident_match(self, grace_steps: int = 4) -> Optional[IncidentMatch]:
+        if self.mode != "stream" or not self.windows:
+            return None
+        return match_incidents(self.report.incidents, self.windows,
+                               grace_steps=grace_steps)
+
+
+# -- workloads ----------------------------------------------------------------
+
+@jax.jit
+def _synth_step(x):
+    # a few ms of real compute per step: long enough that host scheduler
+    # jitter (absolute, ~100s of us) is small relative to the baseline
+    # duration in log space, short enough that the full matrix stays cheap
+    for _ in range(4):
+        x = (x @ jnp.sin(x)) / jnp.maximum(jnp.abs(x).sum(), 1.0)
+    return x
+
+
+@functools.lru_cache(maxsize=1)
+def _serve_parts():
+    """Reduced-GPT-2 decode-step factory, built once per process."""
+    from repro.config import get_arch, reduced
+    from repro.models.model import Runtime, init_decode_caches, init_params
+    from repro.serve.engine import make_decode_step
+
+    cfg = reduced(get_arch("gpt2"))
+    rt = Runtime(mesh=None, compute_dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_decode_step(cfg, rt), donate_argnums=(2,))
+    return cfg, params, step, functools.partial(init_decode_caches, cfg)
+
+
+def run_scenario(scenario: Scenario, mode: str,
+                 config: Optional[EvalConfig] = None,
+                 n_steps: int = 240, seed: int = 0) -> ScenarioRun:
+    """Execute one scenario under one mode/config; returns the scored run."""
+    cfg = config or EvalConfig()
+    if mode not in ("batch", "stream"):
+        raise ValueError(f"mode must be batch|stream, got {mode!r}")
+    eval_start = int(n_steps * scenario.clean_fraction)
+    injector = scenario.injector(n_steps)
+    labels = injector.labels(n_steps)
+    spec = MonitorSpec(
+        mode=mode, probes=list(EVAL_PROBES),
+        probe_options={"device": {"interval": cfg.device_interval}},
+        detector=cfg.detector_spec(holdoff_steps=n_steps - eval_start,
+                                   seed=seed),
+        governor=False, seed=seed)
+    session = Session(spec)
+    runner = (_run_train_steps if scenario.workload == "train"
+              else _run_serve_steps)
+    t0 = time.perf_counter()
+    step_ts = runner(session, injector, n_steps, eval_start, cfg, seed)
+    wall = time.perf_counter() - t0
+    return ScenarioRun(
+        scenario=scenario, mode=mode, config=cfg, n_steps=n_steps,
+        eval_start=eval_start, labels=labels, windows=injector.windows(),
+        step_ts=step_ts, report=session.result(), wall_s=wall)
+
+
+def _drive(session: Session, injector, n_steps: int, eval_start: int,
+           cfg: EvalConfig, one_step) -> np.ndarray:
+    """The shared monitored loop: inject, step, hand cadence to the session.
+    Stream warmup fires exactly at the end of the clean prefix."""
+    col = session.collector
+    step_ts = np.zeros(n_steps)
+    t0 = time.perf_counter()
+    stream = session.spec.mode == "stream"
+    for s in range(n_steps):
+        if stream and s == eval_start:
+            session.warmup()
+        injector.apply(s, col)
+        step_ts[s] = time.perf_counter() - t0
+        one_step(s)
+        if cfg.step_sleep:
+            time.sleep(cfg.step_sleep)
+        if not stream or s >= eval_start:
+            session.on_step(s)
+    injector.clear(col)
+    time.sleep(3 * cfg.device_interval)  # last device samples land
+    return step_ts
+
+
+def _run_train_steps(session: Session, injector, n_steps: int,
+                     eval_start: int, cfg: EvalConfig, seed: int
+                     ) -> np.ndarray:
+    x0 = jnp.ones((192, 192)) * (1.0 + 0.01 * seed)
+    jax.block_until_ready(_synth_step(x0))  # compile outside the probes
+    with session.monitoring():
+        session.collector["collective"].register_compiled(_FAKE_HLO)
+        fn = session.observe_step_fn(_synth_step, sample_args=(x0,),
+                                     mem_gb=0.5)
+        state = {"x": x0}
+
+        def one_step(s):
+            state["x"] = fn(state["x"])
+
+        return _drive(session, injector, n_steps, eval_start, cfg, one_step)
+
+
+def _run_serve_steps(session: Session, injector, n_steps: int,
+                     eval_start: int, cfg: EvalConfig, seed: int
+                     ) -> np.ndarray:
+    model_cfg, params, step, make_caches = _serve_parts()
+    batch_size = 2
+    caches = make_caches(batch_size, n_steps + 1)
+    tok0 = jnp.ones((batch_size, 1), jnp.int32)
+    # compile outside the probes (fresh caches afterwards: donated)
+    logits, _ = step(params, {"tokens": tok0},
+                     make_caches(batch_size, n_steps + 1), jnp.int32(0))
+    jax.block_until_ready(logits)
+    state = {"tok": tok0, "caches": caches}
+    with session.monitoring():
+        fn = session.observe_step_fn(
+            step, sample_args=(params, {"tokens": tok0}, caches,
+                               jnp.int32(0)),
+            mem_gb=0.5)
+
+        def one_step(s):
+            logits, state["caches"] = fn(params, {"tokens": state["tok"]},
+                                         state["caches"], jnp.int32(s))
+            nxt = jnp.argmax(
+                logits[:, -1, : model_cfg.vocab_size], axis=-1)
+            state["tok"] = nxt.astype(jnp.int32)[:, None]
+
+        return _drive(session, injector, n_steps, eval_start, cfg, one_step)

@@ -1,0 +1,115 @@
+"""Scenario-matrix evaluation driver.
+
+    PYTHONPATH=src python -m repro.launch.evaluate --scenarios all \
+        --out results/eval/
+
+Runs the named chaos scenarios through the Session API in batch and stream
+modes, scores detections against the injected ground truth, and writes
+``scenario_matrix.json`` + ``leaderboard.md`` to ``--out``. Exits non-zero
+when the clean-control scenario (if included) breaches the documented
+false-alarm ceiling — CI runs ``--scenarios smoke`` as a detection-quality
+regression gate. See docs/evaluation.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core.chaos import SMOKE_SCENARIOS, scenario_names
+from repro.eval.matrix import (CONFIG_GRID, FAR_CEILING, MODES,
+                               clean_control_far, render_leaderboard,
+                               run_matrix, save_matrix)
+
+
+def _resolve_scenarios(arg: str) -> list:
+    if arg == "all":
+        return scenario_names()
+    if arg == "smoke":
+        return list(SMOKE_SCENARIOS)
+    names = [s for s in arg.split(",") if s]
+    known = set(scenario_names())
+    unknown = sorted(set(names) - known)
+    if unknown:
+        raise SystemExit(f"unknown scenario(s) {unknown}; "
+                         f"available: {', '.join(sorted(known))} "
+                         "(or 'all' / 'smoke')")
+    return names
+
+
+def _resolve_configs(arg: str) -> list:
+    if arg == "grid":
+        return list(CONFIG_GRID)
+    names = [c for c in arg.split(",") if c]
+    unknown = sorted(set(names) - set(CONFIG_GRID))
+    if unknown:
+        raise SystemExit(f"unknown config(s) {unknown}; "
+                         f"available: {', '.join(CONFIG_GRID)} (or 'grid')")
+    return names
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenarios", default="smoke",
+                    help="'all', 'smoke', or a comma-separated list "
+                         f"(all = {', '.join(scenario_names())})")
+    ap.add_argument("--modes", default=",".join(MODES),
+                    help="comma-separated subset of batch,stream")
+    ap.add_argument("--configs", default="default",
+                    help="'grid' or a comma-separated subset of "
+                         f"{', '.join(CONFIG_GRID)}")
+    ap.add_argument("--steps", type=int, default=240,
+                    help="steps per scenario run")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="results/eval",
+                    help="output directory for scenario_matrix.json + "
+                         "leaderboard.md")
+    ap.add_argument("--far-ceiling", type=float, default=FAR_CEILING,
+                    help="max allowed clean-control false-alarm rate "
+                         "(exit 1 above it)")
+    args = ap.parse_args(argv)
+
+    scenarios = _resolve_scenarios(args.scenarios)
+    modes = [m for m in args.modes.split(",") if m]
+    bad_modes = sorted(set(modes) - set(MODES))
+    if bad_modes:
+        raise SystemExit(f"unknown mode(s) {bad_modes}; pick from {MODES}")
+    configs = _resolve_configs(args.configs)
+
+    if args.steps < 160:
+        print(f"[eval] WARNING: --steps {args.steps} leaves a "
+              f"<{int(args.steps * 0.4)}-step clean reference; thresholds "
+              "calibrate poorly below ~160 steps and false-alarm rates "
+              "become meaningless", file=sys.stderr)
+    n_cells = len(scenarios) * len(modes) * len(configs)
+    print(f"[eval] {len(scenarios)} scenario(s) x {len(modes)} mode(s) x "
+          f"{len(configs)} config(s) = {n_cells} runs, "
+          f"{args.steps} steps each")
+
+    def progress(row):
+        m = row["metrics"]
+        print(f"[eval] {row['scenario']:<22} {row['mode']:<6} "
+              f"{row['config']:<14} F1={100 * m['f1']:5.1f}% "
+              f"FAR={100 * m['false_alarm_rate']:5.1f}% "
+              f"faults={m['faults_detected']}/{m['faults_total']} "
+              f"({row['wall_s']:.1f}s)")
+
+    matrix = run_matrix(scenarios, modes=modes, configs=configs,
+                        n_steps=args.steps, seed=args.seed,
+                        progress=progress)
+    matrix["far_ceiling"] = args.far_ceiling
+    paths = save_matrix(matrix, args.out)
+    print(f"[eval] wrote {paths['matrix']} and {paths['leaderboard']}")
+    print()
+    print(render_leaderboard(matrix))
+
+    far = clean_control_far(matrix)
+    if far is not None and far >= args.far_ceiling:
+        print(f"[eval] FAIL: clean-control false-alarm rate "
+              f"{100 * far:.1f}% >= ceiling {100 * args.far_ceiling:.0f}%",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -106,6 +106,7 @@ class OnlineGMMBackend:
             min_flags=self.spec.min_flags,
             seed=self.spec.seed)
         self.monitor.detector.drift_tol = self.spec.drift_tol
+        self.monitor.detector.track = self.spec.warm_start
         self.closed: List[Incident] = []
 
     @property

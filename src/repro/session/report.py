@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -25,6 +25,10 @@ class LayerSummary:
     anomaly_rate: float
     anomalous_steps: List[int]
     log_delta: float
+    # collector-clock timestamp (s) of this layer's earliest flagged event;
+    # None when nothing flagged. The evaluation harness reads this (plus the
+    # raw detections) to compute time-to-detect.
+    first_flag_ts: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -44,12 +48,17 @@ class MonitorReport:
               sink_outputs: Dict[str, str]) -> "MonitorReport":
         layers = {}
         for layer, det in detections.items():
+            # both DetectionResult and WindowDetection carry per-event ts
+            ts = getattr(det, "ts", None)
+            first_ts = (float(ts[det.flags].min())
+                        if ts is not None and det.flags.any() else None)
             layers[layer.value] = LayerSummary(
                 layer=layer.value,
                 events=int(len(det.flags)),
                 anomaly_rate=float(det.anomaly_rate),
                 anomalous_steps=[int(s) for s in det.anomalous_steps()],
-                log_delta=float(det.log_delta))
+                log_delta=float(det.log_delta),
+                first_flag_ts=first_ts)
         return cls(mode=mode, layers=layers, incidents=list(incidents),
                    overhead=overhead, sink_outputs=sink_outputs,
                    detections=dict(detections))

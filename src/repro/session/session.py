@@ -139,15 +139,22 @@ class Session:
             return fn
         return self.node(0).observe_step_fn(fn, **kw)
 
+    # probes that observe the process globally and would therefore record the
+    # detector's own work: the python profile hook fires on every repro/jax
+    # call, and the xla probe's jax.monitoring listeners fire on the EM
+    # fit's compiles/dispatches
+    SELF_OBSERVING_PROBES = ("python", "xla")
+
     @contextlib.contextmanager
     def _detection_pause(self):
-        """Detach python probes while detection runs. The profile hook fires
-        on every repro/jax call — including the detector's own EM fit —
-        which both poisons the python-layer features with monitor
-        self-observation and turns a seconds-long sweep into minutes."""
+        """Detach self-observing probes while detection runs. Monitor
+        self-observation both poisons those layers' features (the EM fit's
+        unfamiliar call/dispatch events score as anomalies at whatever step
+        the sweep lands on) and, for the python hook, turns a seconds-long
+        sweep into minutes."""
         paused = [(h, p) for h in self._nodes.values()
                   for p in h.collector.probes
-                  if p.name == "python" and p.attached]
+                  if p.name in self.SELF_OBSERVING_PROBES and p.attached]
         for _, p in paused:
             p.detach()
         try:

@@ -54,6 +54,10 @@ class DetectorSpec:
     # batch mode: refit cadence and the clean-prefix holdoff
     sweep_every: int = 50
     holdoff_steps: int = 25
+    # stream mode: model tracking. True = warm-started EM refit per window
+    # (cold refit on drift); False = the model is frozen after warmup — the
+    # evaluation harness sweeps this to price what tracking buys
+    warm_start: bool = True
     # stream mode: flush/tick cadence + window and incident parameters
     flush_every: int = 25
     horizon_s: float = 60.0

@@ -8,11 +8,13 @@ Public API:
     FleetAggregator   — multi-node columnar sliding windows
     OnlineGMMDetector — warm-started per-window EM + drift refit
     IncidentEngine    — flag clustering / attribution / ranking
+    match_incidents   — incidents scored against labelled fault windows
     wire              — columnar Event-batch serialization
 """
 from repro.stream import wire  # noqa: F401
 from repro.stream.agent import NodeAgent  # noqa: F401
-from repro.stream.incidents import Incident, IncidentEngine  # noqa: F401
+from repro.stream.incidents import (Incident, IncidentEngine,  # noqa: F401
+                                    IncidentMatch, match_incidents)
 from repro.stream.monitor import StreamMonitor  # noqa: F401
 from repro.stream.online import OnlineGMMDetector, WindowDetection  # noqa: F401
 from repro.stream.window import FleetAggregator, LayerWindow  # noqa: F401

@@ -227,3 +227,65 @@ class IncidentEngine:
 
     def json_report(self) -> str:
         return json.dumps([i.to_json() for i in self.ranked()], indent=1)
+
+
+# ---------------------------------------------------------------------------
+# incident <-> ground-truth matching (evaluation harness)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IncidentMatch:
+    """Incidents scored against labelled fault windows (chaos ground truth).
+
+    ``window_hits[i]`` lists the incident ids overlapping fault window ``i``;
+    an incident overlapping no window is spurious. Precision/recall are at
+    the incident/window level — the step-level metrics live in
+    `repro.eval.metrics`.
+    """
+
+    window_hits: List[List[int]]
+    spurious: List[int]  # incident ids matching no fault window
+
+    @property
+    def windows_detected(self) -> int:
+        return sum(1 for hits in self.window_hits if hits)
+
+    @property
+    def recall(self) -> float:
+        return (self.windows_detected / len(self.window_hits)
+                if self.window_hits else 1.0)
+
+    @property
+    def precision(self) -> float:
+        n_inc = len(self.spurious) + len(
+            {i for hits in self.window_hits for i in hits})
+        return 1.0 - len(self.spurious) / n_inc if n_inc else 1.0
+
+    def to_json(self) -> Dict[str, object]:
+        return {"window_hits": self.window_hits, "spurious": self.spurious,
+                "windows_detected": self.windows_detected,
+                "recall": self.recall, "precision": self.precision}
+
+
+def match_incidents(incidents: Sequence[Incident],
+                    windows: Sequence[tuple],
+                    grace_steps: int = 0) -> IncidentMatch:
+    """Match incidents to ``[start, end)`` fault step windows by step overlap.
+
+    ``windows`` is typically ``FaultInjector.windows()``. An incident counts
+    toward window ``[lo, hi)`` when any of its anomalous steps lands in
+    ``[lo, hi + grace_steps)`` — detection can lag the window by up to a
+    flush interval, which is what the grace covers.
+    """
+    window_hits: List[List[int]] = [[] for _ in windows]
+    spurious: List[int] = []
+    for inc in incidents:
+        steps = set(inc.steps)
+        hit = False
+        for w, (lo, hi) in enumerate(windows):
+            if any(lo <= s < hi + grace_steps for s in steps):
+                window_hits[w].append(inc.incident_id)
+                hit = True
+        if not hit:
+            spurious.append(inc.incident_id)
+    return IncidentMatch(window_hits=window_hits, spurious=spurious)

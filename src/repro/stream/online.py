@@ -147,6 +147,9 @@ class OnlineGMMDetector:
         # per-tick recompilation (~0.5 s) into a one-time cost.
         self.fit_rows = fit_rows
         self.seed = seed
+        # model tracking switch: False freezes every layer model after its
+        # warmup fit (no warm refits, no drift-triggered cold refits)
+        self.track = True
         self.states: Dict[Layer, _LayerState] = {}
         self._key = jax.random.PRNGKey(seed)
         self._rng = np.random.default_rng(seed)
@@ -247,7 +250,7 @@ class OnlineGMMDetector:
             scores = self._score_bucketed(Xs, state.params)
             flags = scores < state.log_delta
             mode = "none"
-            if refit:
+            if refit and self.track:
                 mode = self._track(layer, state, Xs, flags)
             out[layer] = WindowDetection(
                 layer=layer, flags=flags, scores=scores,

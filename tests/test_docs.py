@@ -1,0 +1,44 @@
+"""Docs stay true: links/anchors resolve and the MonitorSpec reference
+covers every registered probe/detector/sink (tools/check_docs.py, the same
+checks CI runs)."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_exist():
+    for name in ("architecture.md", "monitor-spec.md",
+                 "anomaly-detection.md", "evaluation.md"):
+        assert os.path.exists(os.path.join(check_docs.REPO, "docs", name)), \
+            f"docs/{name} missing"
+
+
+def test_links_and_anchors_resolve():
+    problems = check_docs.check_links(check_docs.doc_files())
+    assert not problems, "\n".join(problems)
+
+
+def test_spec_reference_covers_registries():
+    problems = check_docs.check_spec_reference()
+    assert not problems, "\n".join(problems)
+
+
+def test_github_slugs():
+    assert check_docs.github_slug("False-alarm ceiling") == \
+        "false-alarm-ceiling"
+    assert check_docs.github_slug("2. Fit: EM (`core/gmm.py`)") == \
+        "2-fit-em-coregmmpy"
+
+
+def test_checker_catches_broken_link(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("see [here](missing.md) and [a](#nope)\n# Real heading\n")
+    problems = check_docs.check_links([str(bad)])
+    assert len(problems) == 2
+    assert any("missing.md" in p for p in problems)
+    assert any("#nope" in p for p in problems)

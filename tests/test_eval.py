@@ -1,0 +1,255 @@
+"""Evaluation harness: chaos ground-truth labelling, scenario registry,
+detection metrics on hand-built flag sequences, incident matching, and a
+fast end-to-end smoke through the Session API."""
+import numpy as np
+import pytest
+
+from repro.core.chaos import (ALL_KINDS, DEFAULT_MAGNITUDES, Fault,
+                              FaultInjector, Scenario, get_scenario,
+                              register_scenario, scenario_names,
+                              BUILTIN_SCENARIOS, SMOKE_SCENARIOS)
+from repro.core.collector import Collector
+from repro.core.events import Layer
+from repro.eval.metrics import (debounce, detection_metrics, first_flag_ts,
+                                step_predictions)
+from repro.stream.incidents import Incident, match_incidents
+
+
+# ---------------------------------------------------------------------------
+# chaos ground truth
+# ---------------------------------------------------------------------------
+
+def test_labels_overlap_and_clipping():
+    inj = FaultInjector([Fault("op_latency", 2, 6, 0.1),
+                         Fault("net_latency", 4, 9, 2.0),  # overlaps first
+                         Fault("xla_latency", -3, 2, 0.1),  # clipped at 0
+                         Fault("hw_contention", 20, 99, 0.5)])  # past the end
+    y = inj.labels(10)
+    assert y.tolist() == [True, True, True, True, True, True, True, True,
+                          True, False]
+    # merged windows: [-3,9) (three overlapping/adjacent) and [20,99)
+    assert inj.windows() == [(-3, 9), (20, 99)]
+
+
+def test_random_schedule_deterministic_under_seed():
+    a = FaultInjector.random_schedule(300, ["op_latency", "net_latency"],
+                                      seed=7)
+    b = FaultInjector.random_schedule(300, ["op_latency", "net_latency"],
+                                      seed=7)
+    assert a.to_json() == b.to_json()
+    c = FaultInjector.random_schedule(300, ["op_latency", "net_latency"],
+                                      seed=8)
+    assert a.to_json() != c.to_json()
+    np.testing.assert_array_equal(a.labels(300), b.labels(300))
+
+
+def test_mem_leak_ramps_and_clears():
+    col = Collector.standard(with_python=False)
+    inj = FaultInjector([Fault("mem_leak", 2, 10, 0.5)])
+    inj.apply(2, col)
+    assert col["device"].devices[0].mem_leak_gb == pytest.approx(0.5)
+    inj.apply(5, col)  # 4th active step -> 4 * 0.5 GB
+    assert col["device"].devices[0].mem_leak_gb == pytest.approx(2.0)
+    inj.apply(10, col)  # window over
+    assert col["device"].devices[0].mem_leak_gb == 0.0
+    inj.apply(3, col)
+    inj.clear(col)
+    assert col["device"].devices[0].mem_leak_gb == 0.0
+
+
+def test_default_magnitudes_cover_all_kinds():
+    assert set(DEFAULT_MAGNITUDES) == set(ALL_KINDS)
+
+
+# ---------------------------------------------------------------------------
+# scenario registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_scenarios_registered_and_valid():
+    names = scenario_names()
+    assert len(names) >= 8  # the acceptance-criteria floor, with room
+    assert set(SMOKE_SCENARIOS) <= set(names)
+    for s in BUILTIN_SCENARIOS:
+        assert get_scenario(s.name) is s
+        assert s.workload in ("train", "serve")
+        assert set(s.kinds) <= set(ALL_KINDS)
+        faults = s.build_faults(240)
+        labels = s.injector(240).labels(240)
+        if s.kinds:
+            assert faults and all(f.magnitude > 0 for f in faults)
+            # all faults live past the clean prefix, none past the end
+            lo = int(240 * s.clean_fraction)
+            assert all(lo <= f.start_step < f.end_step <= 240
+                       for f in faults)
+            assert 0 < labels.mean() < 0.5
+        else:
+            assert not faults and not labels.any()
+        # deterministic: the schedule is a function of n_steps only
+        assert [f.to_json() for f in faults] == \
+               [f.to_json() for f in s.build_faults(240)]
+
+
+def test_scenario_workload_split():
+    names = scenario_names()
+    serve = [n for n in names if get_scenario(n).workload == "serve"]
+    assert len(serve) >= 3
+    assert "clean_control" in names
+
+
+def test_register_and_unknown_scenario():
+    s = Scenario("tmp_test_scenario", "x", kinds=("op_latency",))
+    try:
+        register_scenario(s)
+        assert get_scenario("tmp_test_scenario") is s
+    finally:
+        from repro.core import chaos
+        chaos._SCENARIOS.pop("tmp_test_scenario", None)
+    with pytest.raises(KeyError, match="available:.*clean_control"):
+        get_scenario("nope")
+
+
+# ---------------------------------------------------------------------------
+# metrics on hand-built sequences
+# ---------------------------------------------------------------------------
+
+class _Det:
+    """Minimal stand-in for DetectionResult/WindowDetection."""
+
+    def __init__(self, steps, flags, ts=None):
+        self.steps = np.asarray(steps)
+        self.flags = np.asarray(flags, dtype=bool)
+        self.ts = None if ts is None else np.asarray(ts, dtype=float)
+
+
+def test_step_predictions_majority_vote():
+    # layer A: 4 events at step 1 (3 flagged -> vote), 4 at step 2 (1 -> no)
+    det_a = _Det(steps=[1, 1, 1, 1, 2, 2, 2, 2],
+                 flags=[1, 1, 1, 0, 1, 0, 0, 0])
+    # layer B: single events; flag at step 3
+    det_b = _Det(steps=[1, 2, 3], flags=[0, 0, 1])
+    preds = step_predictions({Layer.OPERATOR: det_a, Layer.STEP: det_b},
+                             n_steps=5)
+    assert preds["operator"].tolist() == [False, True, False, False, False]
+    assert preds["step"].tolist() == [False, False, False, True, False]
+    assert preds["any"].tolist() == [False, True, False, True, False]
+    # events with unknown steps are ignored
+    det_c = _Det(steps=[-1, -1], flags=[1, 1])
+    assert not step_predictions({Layer.XLA: det_c}, 5)["any"].any()
+
+
+def test_debounce_suppresses_short_runs():
+    pred = np.array([0, 1, 0, 1, 1, 0, 1, 1, 1, 1], dtype=bool)
+    assert debounce(pred, 1).tolist() == pred.tolist()
+    assert debounce(pred, 2).tolist() == [0, 0, 0, 1, 1, 0, 1, 1, 1, 1]
+    assert debounce(pred, 3).tolist() == [0, 0, 0, 0, 0, 0, 1, 1, 1, 1]
+    assert not debounce(np.zeros(4, bool), 2).any()
+    # run touching the end of the array survives
+    tail = np.array([0, 0, 1, 1], dtype=bool)
+    assert debounce(tail, 2).tolist() == [0, 0, 1, 1]
+
+
+def test_detection_metrics_hand_built():
+    n = 20
+    labels = np.zeros(n, dtype=bool)
+    labels[8:12] = True   # one fault window
+    labels[15:18] = True  # another
+    pred = np.zeros(n, dtype=bool)
+    pred[9:12] = True     # hits window 1, one step late
+    pred[4] = True        # false alarm on a clean step
+    step_ts = np.arange(n) * 0.5  # 0.5 s per step
+    m = detection_metrics(pred, labels, [(8, 12), (15, 18)], eval_start=2,
+                          grace_steps=2, step_ts=step_ts)
+    assert m.faults_total == 2 and m.faults_detected == 1
+    assert m.fault_recall == pytest.approx(0.5)
+    assert m.ttd_steps == pytest.approx(1.0)  # first hit at 9, start 8
+    assert m.ttd_s == pytest.approx(0.5)
+    # tp=3 (9..11), fp=1 (step 4), fn=4 (8, 15..17)
+    assert m.precision == pytest.approx(3 / 4)
+    assert m.recall == pytest.approx(3 / 7)
+    assert m.false_alarm_rate == pytest.approx(1 / 11)  # 11 clean eval steps
+    assert m.eval_steps == 18 and m.anomalous_steps == 7
+
+
+def test_detection_metrics_grace_never_credits_next_window():
+    n = 30
+    labels = np.zeros(n, dtype=bool)
+    labels[8:12] = labels[14:18] = True
+    pred = np.zeros(n, dtype=bool)
+    pred[14:18] = True  # only the SECOND window is hit
+    m = detection_metrics(pred, labels, [(8, 12), (14, 18)], grace_steps=10)
+    # window 0's grace range reaches into window 1 but must not claim it
+    assert m.faults_detected == 1
+    assert m.ttd_steps == pytest.approx(0.0)
+
+
+def test_detection_metrics_clean_run():
+    labels = np.zeros(10, dtype=bool)
+    m = detection_metrics(np.zeros(10, dtype=bool), labels, [], eval_start=0)
+    assert m.f1 == 0.0 or m.precision == 1.0  # vacuous but well-defined
+    assert m.false_alarm_rate == 0.0
+    assert m.ttd_steps is None and m.faults_total == 0
+    assert m.fault_recall == 1.0
+
+
+def test_first_flag_ts_picks_earliest():
+    dets = {Layer.XLA: _Det([0, 1], [0, 1], ts=[0.1, 0.9]),
+            Layer.STEP: _Det([0, 1], [1, 1], ts=[0.4, 0.8])}
+    assert first_flag_ts(dets) == pytest.approx(0.4)
+    assert first_flag_ts({Layer.XLA: _Det([0], [0], ts=[0.1])}) is None
+
+
+# ---------------------------------------------------------------------------
+# incident <-> label matching
+# ---------------------------------------------------------------------------
+
+def _incident(iid, steps):
+    return Incident(incident_id=iid, t_start=0.0, t_end=1.0,
+                    suspect_layer=Layer.OPERATOR, suspect_nodes=[0],
+                    severity=1.0, n_flags=len(steps), steps=list(steps),
+                    layer_deficit={}, node_flags={}, status="closed")
+
+
+def test_match_incidents():
+    incs = [_incident(1, [10, 11]),   # window 0
+            _incident(2, [30]),       # in grace of window 1 (ends at 29)
+            _incident(3, [90, 91])]   # spurious
+    m = match_incidents(incs, [(8, 14), (25, 29)], grace_steps=2)
+    assert m.window_hits == [[1], [2]]
+    assert m.spurious == [3]
+    assert m.windows_detected == 2
+    assert m.recall == 1.0
+    assert m.precision == pytest.approx(2 / 3)
+    # without grace, incident 2 no longer matches
+    m2 = match_incidents(incs, [(8, 14), (25, 29)])
+    assert m2.recall == 0.5 and 2 in m2.spurious
+    # no incidents at all
+    m3 = match_incidents([], [(0, 5)])
+    assert m3.recall == 0.0 and m3.precision == 1.0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end smoke (one scenario, one mode, small run)
+# ---------------------------------------------------------------------------
+
+def test_run_scenario_end_to_end_batch():
+    from repro.eval import EvalConfig, run_scenario
+    from repro.eval.matrix import render_leaderboard, run_matrix
+
+    run = run_scenario(get_scenario("latency_spike"), "batch",
+                       EvalConfig(step_sleep=0.001), n_steps=120, seed=0)
+    assert run.eval_start == 48
+    assert len(run.windows) == 3
+    m = run.metrics()
+    assert m.faults_total == 3
+    # the injected operator fault must be found (paper claim, smoke scale)
+    assert m.faults_detected >= 2
+    assert m.recall > 0.3
+    # report surfaces flag timestamps for at least one flagged layer
+    flagged = [ls for ls in run.report.layers.values()
+               if ls.anomaly_rate > 0]
+    assert any(ls.first_flag_ts is not None for ls in flagged)
+    # matrix row + leaderboard render from the same run machinery
+    matrix = run_matrix(["clean_control"], modes=["batch"], n_steps=80)
+    assert len(matrix["rows"]) == 1
+    text = render_leaderboard(matrix)
+    assert "clean_control" in text and "FAR" in text

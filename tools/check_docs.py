@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""Documentation checker: broken links/anchors + registry drift.
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Two families of checks, both run by CI and by tests/test_docs.py:
+
+* **links**: every relative markdown link in README.md and docs/*.md must
+  point at an existing file, and every ``#anchor`` (same-page or cross-page)
+  must match a heading in the target document (GitHub slug rules).
+* **registry**: docs/monitor-spec.md must mention every probe, detector
+  backend, and sink kind registered in `repro.session.registry` — the spec
+  reference is only a reference while it is complete.
+
+Exit code 0 = clean; 1 = problems (printed one per line).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Dict, List, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — excluding images and absolute URLs
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def doc_files() -> List[str]:
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return [f for f in files if os.path.exists(f)]
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown/punctuation, spaces -> dashes."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def heading_slugs(path: str) -> List[str]:
+    text = _CODE_FENCE_RE.sub("", open(path).read())
+    slugs: Dict[str, int] = {}
+    out = []
+    for m in _HEADING_RE.finditer(text):
+        slug = github_slug(m.group(1))
+        n = slugs.get(slug, 0)
+        slugs[slug] = n + 1
+        out.append(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def check_links(files: List[str]) -> List[str]:
+    problems = []
+    for path in files:
+        rel = os.path.relpath(path, REPO)
+        text = _CODE_FENCE_RE.sub("", open(path).read())
+        for m in _LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            target, _, anchor = target.partition("#")
+            tpath = (path if not target
+                     else os.path.normpath(
+                         os.path.join(os.path.dirname(path), target)))
+            if not os.path.exists(tpath):
+                problems.append(f"{rel}: broken link -> {m.group(1)}")
+                continue
+            if anchor and tpath.endswith(".md"):
+                if anchor not in heading_slugs(tpath):
+                    problems.append(
+                        f"{rel}: missing anchor #{anchor} in "
+                        f"{os.path.relpath(tpath, REPO)}")
+    return problems
+
+
+def registered_names() -> Tuple[List[str], List[str], List[str]]:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.session.registry import (detector_names, probe_names,
+                                        sink_kinds)
+
+    return probe_names(), detector_names(), sink_kinds()
+
+
+def check_spec_reference() -> List[str]:
+    path = os.path.join(REPO, "docs", "monitor-spec.md")
+    rel = os.path.relpath(path, REPO)
+    if not os.path.exists(path):
+        return [f"{rel}: missing (the MonitorSpec reference is required)"]
+    text = open(path).read()
+    probes, detectors, sinks = registered_names()
+    problems = []
+    for kind, names in (("probe", probes), ("detector", detectors),
+                        ("sink", sinks)):
+        for name in names:
+            # names are documented as inline code spans
+            if f"`{name}`" not in text:
+                problems.append(
+                    f"{rel}: registered {kind} `{name}` is undocumented")
+    return problems
+
+
+def main() -> int:
+    files = doc_files()
+    problems = check_links(files) + check_spec_reference()
+    for p in problems:
+        print(p)
+    print(f"checked {len(files)} file(s): "
+          f"{'FAIL, ' + str(len(problems)) + ' problem(s)' if problems else 'OK'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
