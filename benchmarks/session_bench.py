@@ -2,6 +2,7 @@
 unified `Session` API.
 
     PYTHONPATH=src python -m benchmarks.session_bench
+    PYTHONPATH=src python -m benchmarks.session_bench --check-baseline
 
 Runs the same jitted step three ways — no session (baseline), a batch-mode
 session, and a stream-mode session — with the full `observe_step_fn` +
@@ -9,19 +10,37 @@ session, and a stream-mode session — with the full `observe_step_fn` +
 the API-level companion of table2_overhead (which measures probe overhead on
 a real train step): here the step is deliberately small so the numbers bound
 the session machinery's worst case.
+
+Also measures raw columnarisation throughput (events/sec through
+`EventTable.append_rows` -> `drain_columns`), the per-record cost floor of
+the probe suite. ``--check-baseline`` compares the fresh probes-only
+overhead against the committed ``results/bench/session_bench.json`` — a
+warn-only CI gate (prints a GitHub warning annotation, never fails the
+build; absolute timings shift with runner hardware).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import save_result
+from benchmarks.common import RESULTS_DIR, save_result
+from repro.core.events import EventTable, Layer
 from repro.session import DetectorSpec, MonitorSpec, Session
 
 PROBES = ["xla", "operator", "collective", "device", "step"]
+
+# warn when probes-only ms/step regresses by more than this vs the baseline
+REGRESSION_TOLERANCE = 0.25
+# ... plus an absolute allowance: sub-ms baselines sit inside host-scheduler
+# noise, so a pure relative gate would warn on jitter
+REGRESSION_ABS_MS = 0.5
 
 
 def _step_fn():
@@ -61,7 +80,64 @@ def _run_loop(n_steps: int, session: Session, warm_steps: int = 200) -> float:
     return n_steps / dt
 
 
-def run(n_steps: int = 400) -> Dict[str, object]:
+def columnarise_throughput(n_rows: int = 480_000,
+                           block: int = 24) -> Dict[str, float]:
+    """events/sec through the columnar hot path: per-step-shaped blocks
+    (the operator probe's top-N attribution) block-appended into an
+    `EventTable`, drained as columns every ~1000 blocks (a flush)."""
+    table = EventTable(capacity=n_rows + 1)
+    names = np.array([f"op{i}" for i in range(block)])
+    fracs = np.linspace(0.5, 1.0, block)
+    sizes = np.linspace(1e4, 1e6, block)
+    n_blocks = n_rows // block
+    t0 = time.perf_counter()
+    for i in range(n_blocks):
+        table.append_rows(Layer.OPERATOR, names, ts=1e-3 * i,
+                          dur=1e-3 * fracs, size=sizes, step=i, pid=11)
+        if i % 1000 == 999:
+            table.drain_columns()
+    table.drain_columns()
+    dt = time.perf_counter() - t0
+    return {"columnarise_events_per_s": n_blocks * block / dt,
+            "columnarise_us_per_event": 1e6 * dt / (n_blocks * block)}
+
+
+def check_baseline(fresh: Dict[str, object],
+                   path: Optional[str] = None) -> int:
+    """Warn-only regression gate vs the committed baseline JSON. Returns the
+    number of warnings (the caller still exits 0 — absolute timings are
+    hardware-dependent; the gate exists to flag drift, not to block)."""
+    path = path or os.path.join(RESULTS_DIR, "session_bench.json")
+    if not os.path.exists(path):
+        print(f"[bench-gate] no baseline at {path}; skipping comparison")
+        return 0
+    with open(path) as f:
+        base = json.load(f)
+    warnings = 0
+    for key in ("probes_ms_per_step", "stream_ms_per_step"):
+        ref = base.get(key)
+        got = fresh.get(key)
+        if ref is None or got is None:
+            continue
+        if got > ref * (1 + REGRESSION_TOLERANCE) + REGRESSION_ABS_MS:
+            print(f"::warning title=session_bench regression::{key} "
+                  f"{got:.3f} ms/step vs committed {ref:.3f} ms/step "
+                  f"(>{100 * REGRESSION_TOLERANCE:.0f}% "
+                  f"+ {REGRESSION_ABS_MS} ms slower)")
+            warnings += 1
+        else:
+            print(f"[bench-gate] {key}: {got:.3f} ms/step "
+                  f"(baseline {ref:.3f}) OK")
+    ref_col = base.get("columnarise_events_per_s")
+    got_col = fresh.get("columnarise_events_per_s")
+    if ref_col and got_col and got_col < ref_col * (1 - REGRESSION_TOLERANCE):
+        print(f"::warning title=session_bench regression::columnarise "
+              f"{got_col:,.0f} events/s vs committed {ref_col:,.0f}")
+        warnings += 1
+    return warnings
+
+
+def run(n_steps: int = 400, save: bool = True) -> Dict[str, object]:
     base = _run_loop(n_steps, Session(MonitorSpec()))  # mode=off: identity
     # probes-only: detection cadence pushed past the horizon, so this is the
     # pure cost of the probe suite + session plumbing per step
@@ -88,12 +164,20 @@ def run(n_steps: int = 400) -> Dict[str, object]:
         "overhead_batch_pct": 100.0 * (base / batch - 1.0),
         "overhead_stream_pct": 100.0 * (base / stream - 1.0),
     }
-    save_result("session_bench", out)
+    out.update(columnarise_throughput())
+    if save:
+        save_result("session_bench", out)
     return out
 
 
 def main() -> None:
-    out = run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="compare against the committed baseline JSON "
+                         "(warn-only) instead of overwriting it")
+    args = ap.parse_args()
+    out = run(n_steps=args.steps, save=not args.check_baseline)
     print(f"unmonitored:      {out['steps_per_s_unmonitored']:8.0f} steps/s")
     print(f"probes only:      {out['steps_per_s_probes_only']:8.0f} steps/s "
           f"(+{out['probes_ms_per_step']:.2f} ms/step)")
@@ -101,6 +185,12 @@ def main() -> None:
           f"(+{out['batch_ms_per_step']:.2f} ms/step; periodic full refit)")
     print(f"stream session:   {out['steps_per_s_stream']:8.0f} steps/s "
           f"(+{out['stream_ms_per_step']:.2f} ms/step; windowed warm EM)")
+    print(f"columnarisation:  {out['columnarise_events_per_s']:,.0f} events/s "
+          f"({out['columnarise_us_per_event']:.2f} us/event)")
+    if args.check_baseline:
+        check_baseline(out)
+        # fresh CI numbers land next to (never over) the committed baseline
+        save_result("session_bench_ci", out)
 
 
 if __name__ == "__main__":

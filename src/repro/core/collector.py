@@ -1,4 +1,5 @@
-"""Collector: owns the ring buffer and the probe suite; the eACGM daemon.
+"""Collector: owns the columnar event table and the probe suite; the eACGM
+daemon.
 
 Usage (note: the model/training code is never modified — the launcher simply
 asks the collector to observe the callable and artifacts it already has):
@@ -8,7 +9,13 @@ asks the collector to observe the callable and artifacts it already has):
         step_fn = col.observe_step_fn(step_fn, lowered=lowered)
         for batch in data:
             state = step_fn(state, batch)
-    report = col.drain()
+    cols = col.drain_columns()
+
+Probes emit row blocks straight into the `EventTable`; `drain_columns` /
+`snapshot_columns` hand the same columns to the feature builder and the wire
+encoder. The Event-list `drain()`/`snapshot()` remain as compat shims that
+materialise objects on demand (export, legacy tooling) — never on the
+monitoring hot path.
 """
 from __future__ import annotations
 
@@ -17,13 +24,15 @@ import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional
 
-from repro.core.events import Event, Layer, RingBuffer, export_perfetto
+import numpy as np
+
+from repro.core.events import Event, EventTable, Layer, export_perfetto
 from repro.core.probes import Probe
 
 
 class Collector:
     def __init__(self, probes: List[Probe], capacity: int = 1_000_000):
-        self.buffer = RingBuffer(capacity)
+        self.buffer = EventTable(capacity)
         self.probes = probes
         self.t0 = time.perf_counter()
         self._by_name = {p.name: p for p in probes}
@@ -112,7 +121,15 @@ class Collector:
         return step.wrap(fn)
 
     # -- data -----------------------------------------------------------------
+    def drain_columns(self) -> Dict[str, np.ndarray]:
+        """Remove and return all rows as a ColumnView (the native path)."""
+        return self.buffer.drain_columns()
+
+    def snapshot_columns(self) -> Dict[str, np.ndarray]:
+        return self.buffer.snapshot_columns()
+
     def drain(self) -> List[Event]:
+        """Compat shim: drain and materialise `Event` objects."""
         return self.buffer.drain()
 
     def snapshot(self) -> List[Event]:
@@ -126,5 +143,6 @@ class Collector:
             "events": len(self.buffer),
             "events_total": self.buffer.pushed,
             "dropped": self.buffer.dropped,
+            "names_truncated": self.buffer.names_truncated,
             "emitted_per_probe": {p.name: p.emitted for p in self.probes},
         }

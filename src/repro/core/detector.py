@@ -14,8 +14,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.events import Event, Layer
-from repro.core.features import (FeatureSet, LayerFeaturizer, Standardizer,
-                                 build_features)
+from repro.core.features import (EventsOrColumns, FeatureSet, LayerFeaturizer,
+                                 Standardizer, build_features, ensure_columns)
 from repro.core.gmm import GMM
 
 
@@ -83,10 +83,11 @@ class FullStackMonitor:
         self.detectors: Dict[Layer, GMMDetector] = {}
         self.featurizers: Dict[Layer, LayerFeaturizer] = {}
 
-    def fit(self, events: List[Event]) -> "FullStackMonitor":
+    def fit(self, data: EventsOrColumns) -> "FullStackMonitor":
+        cols = ensure_columns(data)  # columnarise legacy Event lists ONCE
         for layer in self.LAYERS:
             feat = LayerFeaturizer(layer)
-            fs = feat.fit_transform(events)
+            fs = feat.fit_transform(cols)
             if fs is None or fs.X.shape[0] < self.min_events:
                 continue
             k = min(self.n_components, max(1, fs.X.shape[0] // 32))
@@ -95,10 +96,11 @@ class FullStackMonitor:
                 n_components=k, contamination=self.contamination).fit(fs.X)
         return self
 
-    def detect(self, events: List[Event]) -> Dict[Layer, DetectionResult]:
+    def detect(self, data: EventsOrColumns) -> Dict[Layer, DetectionResult]:
+        cols = ensure_columns(data)
         out: Dict[Layer, DetectionResult] = {}
         for layer, det in self.detectors.items():
-            fs = self.featurizers[layer].transform(events)
+            fs = self.featurizers[layer].transform(cols)
             if fs is None or not len(fs.X):
                 continue
             scores = det.score(fs.X)

@@ -109,9 +109,16 @@ def fit_gmm(X: jnp.ndarray, key: jnp.ndarray, *, n_components: int,
 
 @jax.jit
 def score_samples(X: jnp.ndarray, params: GMMParams) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Best-component log density + argmax component (Algorithm 2 lines 5-6)."""
-    log_p = component_log_prob(X.astype(jnp.float32), params)
-    return jnp.max(log_p, axis=1), jnp.argmax(log_p, axis=1)
+    """Best-component log density + argmax component (Algorithm 2 lines 5-6).
+
+    Routed through the FUSED kernels.ops.gmm_best path (one pass: density +
+    max + argmax; Pallas on TPU, jnp oracle elsewhere) — the (N, K)
+    intermediate never hits HBM. Both detector backends (batch sweep and
+    streaming window scorer) score through here."""
+    from repro.kernels import ops
+
+    return ops.gmm_best(X.astype(jnp.float32), params.means,
+                        params.prec_chol)
 
 
 @jax.jit

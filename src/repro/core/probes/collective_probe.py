@@ -11,7 +11,9 @@ import os
 import re
 from typing import Any, Dict, List, Optional
 
-from repro.core.events import Event, Layer
+import numpy as np
+
+from repro.core.events import Layer
 from repro.core.probes.base import Probe
 
 COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -58,11 +60,21 @@ def collective_bytes_by_op(hlo_text: str) -> Dict[str, float]:
 class CollectiveProbe(Probe):
     name = "collective"
 
-    def __init__(self, link_bw: float = 50e9, latency_us: float = 10.0):
+    def __init__(self, link_bw: float = 50e9, latency_us: float = 10.0,
+                 seed: Optional[int] = None):
         super().__init__()
         self.link_bw = link_bw
         self.latency_us = latency_us
         self._schedule: List[Dict[str, Any]] = []
+        # columnar replay state, computed once at register_compiled: per-step
+        # emission scales the base-latency column (no per-op Python loop)
+        self._ops = np.empty(0, dtype="<U64")
+        self._bytes = np.empty(0, dtype=np.float64)
+        self._base_lat = np.empty(0, dtype=np.float64)
+        # seed=None (the default) draws fresh OS entropy per probe instance:
+        # a fixed default would make every node's jitter/retransmit sequence
+        # byte-identical, collapsing cross-node variance in fleet runs
+        self._rng = np.random.default_rng(seed)
         self.comm_scale = 1.0  # chaos hook: >1 under injected network faults
         self.drop_prob = 0.0   # chaos hook: packet-loss -> retransmit inflation
 
@@ -71,33 +83,58 @@ class CollectiveProbe(Probe):
 
     def _detach(self) -> None:
         self._schedule = []
+        self._ops = np.empty(0, dtype="<U64")
+        self._bytes = np.empty(0, dtype=np.float64)
+        self._base_lat = np.empty(0, dtype=np.float64)
 
     def register_compiled(self, hlo_text: str) -> None:
         """Read the collective schedule off a compiled artifact (non-intrusive)."""
+        import json
+
         self._schedule = parse_hlo_collectives(hlo_text)
-        for rec in self._schedule[:64]:
-            self.emit(Event(layer=Layer.COLLECTIVE, name="static/" + rec["op"],
-                            ts=self.now(), size=rec["bytes"], pid=os.getpid(),
-                            meta={"shape": str(rec["shape"])}))
+        self._ops = np.array([rec["op"] for rec in self._schedule])
+        self._bytes = np.array([float(rec["bytes"])
+                                for rec in self._schedule])
+        self._base_lat = self._bytes / self.link_bw + self.latency_us * 1e-6
+        head = self._schedule[:64]
+        if head:
+            self.emit_rows(
+                Layer.COLLECTIVE,
+                np.array(["static/" + rec["op"] for rec in head]),
+                ts=self.now(), size=self._bytes[:len(head)], pid=os.getpid(),
+                meta=np.array([json.dumps({"shape": str(rec["shape"])},
+                                          separators=(",", ":"))
+                               for rec in head], dtype=object))
 
     def observe_step(self, step: int, ts: float, rng=None) -> float:
-        """Emit per-collective latency events for one step; returns total comm
-        seconds (bandwidth model x chaos perturbation)."""
-        import random as _random
+        """Emit per-collective latency rows for one step; returns total comm
+        seconds (bandwidth model x chaos perturbation). One block append.
 
-        rng = rng or _random
-        total = 0.0
-        for rec in self._schedule:
-            base = rec["bytes"] / self.link_bw + self.latency_us * 1e-6
-            lat = base * self.comm_scale
-            if self.drop_prob > 0:  # retransmits under loss
-                retries = 0
-                while rng.random() < self.drop_prob and retries < 5:
-                    retries += 1
-                lat *= (1 + retries)
-            lat *= 1.0 + 0.05 * rng.random()  # jitter
-            total += lat
-            self.emit(Event(layer=Layer.COLLECTIVE, name=rec["op"], ts=ts,
-                            dur=lat, size=rec["bytes"], step=step,
-                            pid=os.getpid()))
-        return total
+        ``rng`` accepts a numpy Generator (vectorised) or, for back-compat,
+        any random-module-style object with an argless ``random()``."""
+        n = self._base_lat.shape[0]
+        if not n:
+            return 0.0
+        gen = self._rng if rng is None else rng
+        lat = self._base_lat * self.comm_scale
+        if not isinstance(gen, np.random.Generator):
+            # legacy rng objects (random module / random.Random): keep the
+            # original sequential draw order exactly
+            retries = np.zeros(n)
+            jitter = np.empty(n)
+            for i in range(n):
+                if self.drop_prob > 0:
+                    while gen.random() < self.drop_prob and retries[i] < 5:
+                        retries[i] += 1
+                jitter[i] = gen.random()
+            lat = lat * (1.0 + retries) * (1.0 + 0.05 * jitter)
+        else:
+            if self.drop_prob > 0:  # retransmits under loss: count
+                # consecutive drops (up to 5) like the sequential retry loop
+                drops = gen.random((n, 5)) < self.drop_prob
+                retries = np.cumprod(drops, axis=1).sum(axis=1)
+                lat = lat * (1.0 + retries)
+            lat = lat * (1.0 + 0.05 * gen.random(n))  # jitter
+        self.emit_rows(Layer.COLLECTIVE, self._ops, ts=ts, dur=lat,
+                       size=self._bytes, step=step, pid=os.getpid())
+        return float(lat.sum())

@@ -18,9 +18,10 @@ import threading
 import time
 from typing import Dict, List, Optional
 
+import numpy as np
 import psutil
 
-from repro.core.events import Event, Layer
+from repro.core.events import Layer
 from repro.core.probes.base import Probe
 
 
@@ -69,6 +70,8 @@ class DeviceProbe(Probe):
         self.interval = interval
         self.devices = telemetry or [TpuTelemetryModel(seed=i)
                                      for i in range(n_devices)]
+        self._dev_names = np.array([f"tpu{i}"
+                                    for i in range(len(self.devices))])
         self._proc = psutil.Process()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
@@ -88,19 +91,26 @@ class DeviceProbe(Probe):
             self._thread = None
 
     def sample_once(self) -> None:
+        """One telemetry sweep: host-truth row + one row per device, each
+        with its telemetry in the dedicated columns (no meta dicts)."""
         ts = self.now()
+        pid = os.getpid()
         with self._proc.oneshot():
             rss = self._proc.memory_info().rss
             cpu = self._proc.cpu_percent(interval=None)
             nthreads = self._proc.num_threads()
-        self.emit(Event(layer=Layer.DEVICE, name="host.process", ts=ts,
-                        size=float(rss), pid=os.getpid(),
-                        meta={"cpu_pct": cpu, "threads": nthreads}))
-        for i, dev in enumerate(self.devices):
-            m = dev.sample(self.current_duty, self.current_mem_gb)
-            self.emit(Event(layer=Layer.DEVICE, name=f"tpu{i}", ts=ts,
-                            size=m["mem_gb"] * 2**30, pid=os.getpid(),
-                            meta=m))
+        self.emit_rows(Layer.DEVICE, "host.process", ts, size=float(rss),
+                       pid=pid,
+                       meta=f'{{"cpu_pct":{cpu},"threads":{nthreads}}}')
+        samples = [dev.sample(self.current_duty, self.current_mem_gb)
+                   for dev in self.devices]
+        mem = np.array([m["mem_gb"] for m in samples])
+        self.emit_rows(Layer.DEVICE, self._dev_names, ts, size=mem * 2**30,
+                       pid=pid,
+                       util=np.array([m["util"] for m in samples]),
+                       mem_gb=mem,
+                       power_w=np.array([m["power_w"] for m in samples]),
+                       temp_c=np.array([m["temp_c"] for m in samples]))
 
     def _loop(self) -> None:
         while not self._stop.wait(self.interval):

@@ -7,12 +7,13 @@ from *inside* the framework exactly like eBPF uprobes on libcudart calls.
 """
 from __future__ import annotations
 
+import json
 import os
 from typing import Callable, List
 
 import jax
 
-from repro.core.events import Event, Layer
+from repro.core.events import Layer
 from repro.core.probes.base import Probe
 
 
@@ -26,14 +27,15 @@ class JaxRuntimeProbe(Probe):
 
     def _attach(self) -> None:
         def on_duration(name: str, secs: float, **kw):
-            self.emit(Event(layer=Layer.XLA, name=name, ts=self.now(),
-                            dur=secs, pid=os.getpid(),
-                            meta={k: v for k, v in kw.items()
-                                  if isinstance(v, (int, float, str))} or None))
+            extra = {k: v for k, v in kw.items()
+                     if isinstance(v, (int, float, str))}
+            self.emit_rows(Layer.XLA, name, self.now(), dur=secs,
+                           pid=os.getpid(),
+                           meta=json.dumps(extra, separators=(",", ":"))
+                           if extra else "")
 
         def on_event(name: str, **kw):
-            self.emit(Event(layer=Layer.XLA, name=name, ts=self.now(),
-                            pid=os.getpid()))
+            self.emit_rows(Layer.XLA, name, self.now(), pid=os.getpid())
 
         self._dur_listener = on_duration
         self._evt_listener = on_event

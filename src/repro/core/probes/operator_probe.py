@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.events import Event, Layer
+from repro.core.events import Layer
 from repro.core.probes.base import Probe
 
 
@@ -125,12 +125,21 @@ class OperatorProbe(Probe):
         self.top_n = top_n
         self._records: List[Dict[str, Any]] = []
         self._total_flops = 0.0
+        # per-step emission is fully columnar: the name/size/flop-fraction
+        # columns are computed ONCE at register_fn and replayed every step
+        # with a single scaled dur column (no per-record Python work)
+        self._row_names = np.empty(0, dtype="<U64")
+        self._row_fracs = np.empty(0, dtype=np.float64)
+        self._row_bytes = np.empty(0, dtype=np.float64)
 
     def _attach(self) -> None:
         pass  # passive: fed by the collector/step probe
 
     def _detach(self) -> None:
         self._records = []
+        self._row_names = np.empty(0, dtype="<U64")
+        self._row_fracs = np.empty(0, dtype=np.float64)
+        self._row_bytes = np.empty(0, dtype=np.float64)
 
     def register_fn(self, fn, *args, **kwargs) -> None:
         """Extract the operator stream of a step function (never modifies it)."""
@@ -138,16 +147,28 @@ class OperatorProbe(Probe):
         recs.sort(key=lambda r: -r["flops"])
         self._records = recs[: self.top_n]
         self._total_flops = max(sum(r["flops"] for r in recs), 1.0)
-        for r in recs[: self.top_n]:
-            self.emit(Event(layer=Layer.OPERATOR, name="static/" + r["name"],
-                            ts=self.now(), size=r["bytes"], pid=os.getpid(),
-                            meta={"flops": r["flops"], "shape": str(r["out_shape"])}))
+        self._row_names = np.array([r["prim"] for r in self._records])
+        self._row_fracs = np.array(
+            [r["flops"] / self._total_flops for r in self._records])
+        self._row_bytes = np.array([float(r["bytes"]) for r in self._records])
+        if self._records:
+            import json
+
+            self.emit_rows(
+                Layer.OPERATOR,
+                np.array(["static/" + r["name"] for r in self._records]),
+                ts=self.now(), size=self._row_bytes, pid=os.getpid(),
+                meta=np.array(
+                    [json.dumps({"flops": r["flops"],
+                                 "shape": str(r["out_shape"])},
+                                separators=(",", ":"))
+                     for r in self._records], dtype=object))
 
     def observe_step(self, step: int, step_dur: float, ts: float) -> None:
-        """Attribute a measured step duration across the operator stream."""
-        for r in self._records:
-            frac = r["flops"] / self._total_flops
-            self.emit(Event(layer=Layer.OPERATOR, name=r["prim"], ts=ts,
-                            dur=step_dur * frac, size=r["bytes"], step=step,
-                            pid=os.getpid(),
-                            meta={"flops": r["flops"]}))
+        """Attribute a measured step duration across the operator stream —
+        one block append of top_n rows, dur = step_dur * flop fraction."""
+        if not self._row_names.shape[0]:
+            return
+        self.emit_rows(Layer.OPERATOR, self._row_names, ts=ts,
+                       dur=step_dur * self._row_fracs, size=self._row_bytes,
+                       step=step, pid=os.getpid())

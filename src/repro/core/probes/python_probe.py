@@ -14,7 +14,7 @@ import threading
 import time
 from typing import Optional, Sequence, Tuple
 
-from repro.core.events import Event, Layer
+from repro.core.events import Layer
 from repro.core.probes.base import Probe
 
 
@@ -56,8 +56,8 @@ class PythonProbe(Probe):
             if stack and stack[-1][1] == id(frame):
                 name, _, t_enter = stack.pop()
                 t = self.now()
-                self.emit(Event(layer=Layer.PYTHON, name=name, ts=t_enter,
-                                dur=t - t_enter, pid=os.getpid(), tid=tid))
+                self.emit_rows(Layer.PYTHON, name, t_enter, dur=t - t_enter,
+                               pid=os.getpid(), tid=tid)
 
     def _attach(self) -> None:
         self._prev_hook = sys.getprofile()

@@ -14,7 +14,7 @@ from typing import Any, Callable, Optional
 
 import jax
 
-from repro.core.events import Event, Layer
+from repro.core.events import Layer
 from repro.core.probes.base import Probe
 
 
@@ -58,11 +58,11 @@ class StepProbe(Probe):
             self.step_count += 1
             # runtime/XLA layer: the executable-run duration an eBPF uprobe on
             # the runtime's execute symbol would time (CUDA-layer analogue)
-            self.emit(Event(layer=Layer.XLA, name="executable_run", ts=t0,
-                            dur=exec_dur + self.extra_xla, step=step,
-                            pid=os.getpid()))
-            self.emit(Event(layer=Layer.STEP, name="train_step", ts=t0,
-                            dur=dur, step=step, pid=os.getpid()))
+            pid = os.getpid()
+            self.emit_rows(Layer.XLA, "executable_run", t0,
+                           dur=exec_dur + self.extra_xla, step=step, pid=pid)
+            self.emit_rows(Layer.STEP, "train_step", t0, dur=dur, step=step,
+                           pid=pid)
             comm = 0.0
             if self.collective_probe is not None and self.collective_probe.attached:
                 comm = self.collective_probe.observe_step(step, t0)

@@ -20,6 +20,7 @@ from typing import Dict, List, Optional, Protocol, runtime_checkable
 from repro.core.collector import Collector
 from repro.core.detector import DetectionResult, FullStackMonitor
 from repro.core.events import Event, Layer
+from repro.core.features import EventsOrColumns
 from repro.session.registry import register_detector
 from repro.session.spec import DetectorSpec
 from repro.stream.incidents import Incident
@@ -45,10 +46,10 @@ class Detector(Protocol):
 class BatchGMMBackend:
     """`FullStackMonitor` behind the Detector protocol.
 
-    ``fit`` takes the clean reference events (and may be called again on a
-    later, longer prefix — each call is a full refit, matching the periodic
-    sweep the batch driver always ran); ``update`` scores an event list with
-    the current models.
+    ``fit`` takes the clean reference data — a ColumnView (native) or a
+    legacy `Event` list — and may be called again on a later, longer prefix:
+    each call is a full refit, matching the periodic sweep the batch driver
+    always ran. ``update`` scores columns/events with the current models.
     """
 
     def __init__(self, spec: Optional[DetectorSpec] = None):
@@ -60,20 +61,20 @@ class BatchGMMBackend:
     def fitted(self) -> bool:
         return self._monitor is not None and bool(self._monitor.detectors)
 
-    def fit(self, events: List[Event]) -> List[Layer]:
+    def fit(self, data: EventsOrColumns) -> List[Layer]:
         contamination = (BATCH_CONTAMINATION
                          if self.spec.contamination is None
                          else self.spec.contamination)
         self._monitor = FullStackMonitor(
             n_components=self.spec.n_components,
             contamination=contamination,
-            min_events=self.spec.min_events).fit(events)
+            min_events=self.spec.min_events).fit(data)
         return list(self._monitor.detectors)
 
-    def update(self, events: List[Event]) -> Dict[Layer, DetectionResult]:
+    def update(self, data: EventsOrColumns) -> Dict[Layer, DetectionResult]:
         if not self.fitted:
             return {}
-        self._last = self._monitor.detect(events)
+        self._last = self._monitor.detect(data)
         return self._last
 
     def flags(self) -> Dict[Layer, DetectionResult]:

@@ -128,8 +128,10 @@ def _operator_probe(opts: Dict[str, Any], peers: Dict[str, Probe]) -> Probe:
 
 @register_probe("collective")
 def _collective_probe(opts: Dict[str, Any], peers: Dict[str, Probe]) -> Probe:
+    seed = opts.get("seed")
     return CollectiveProbe(link_bw=float(opts.get("link_bw", 50e9)),
-                           latency_us=float(opts.get("latency_us", 10.0)))
+                           latency_us=float(opts.get("latency_us", 10.0)),
+                           seed=None if seed is None else int(seed))
 
 
 @register_probe("device")

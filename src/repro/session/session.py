@@ -25,8 +25,11 @@ import contextlib
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional
 
+import numpy as np
+
 from repro.core.collector import Collector
-from repro.core.events import Event, Layer
+from repro.core.events import (Event, Layer, concat_columns,
+                               select_columns)
 from repro.core.governor import Action, Governor
 from repro.session import sinks as sinks_mod
 from repro.session.registry import build_probes, detector_backend
@@ -184,13 +187,14 @@ class Session:
         else:  # batch: periodic snapshot sweep (fit on the clean prefix)
             if step % det.sweep_every:
                 return out
-            events = self._snapshot_events()
-            train = [e for e in events if e.step < step - det.holdoff_steps]
-            if not train:
+            cols = self._snapshot_columns()
+            train = select_columns(
+                cols, cols["step"] < step - det.holdoff_steps)
+            if not train["ts"].shape[0]:
                 return out
             with self._detection_pause():
                 self._backend.fit(train)
-                out.detections = self._backend.update(events)
+                out.detections = self._backend.update(cols)
         if self.governor is not None and out.detections:
             out.actions = self.governor.decide(out.detections)
         return out
@@ -226,14 +230,19 @@ class Session:
                         e.pid = batch.node_id
                 s.on_events(events)
 
-    def _snapshot_events(self) -> List[Event]:
-        events: List[Event] = []
-        for h in self._nodes.values():
-            events.extend(h.collector.snapshot())
-        return events
+    def _snapshot_columns(self) -> Dict[str, np.ndarray]:
+        return concat_columns([h.collector.snapshot_columns()
+                               for h in self._nodes.values()])
 
     # -- finalisation ---------------------------------------------------------
     def _finalize(self) -> None:
+        # Detach every probe BEFORE the final drain: the drained columns are
+        # zero-copy views, and sink materialisation / final fits must not
+        # race live emission (the python probe in particular fires on the
+        # materialisation loop's own frames). monitoring() detaches again on
+        # exit — detach is idempotent.
+        for h in reversed(list(self._nodes.values())):
+            h.collector.detach()
         incidents: List[Incident] = []
         detections: Dict[Layer, Any] = {}
         if self.spec.mode == "stream":
@@ -242,26 +251,31 @@ class Session:
             incidents = self._backend.incidents  # ranked, all closed
             detections = self._backend.flags()
         else:
-            events: List[Event] = []
+            parts: List[Dict[str, np.ndarray]] = []
             for h in self._nodes.values():
-                node_events = h.collector.drain()
+                node_cols = h.collector.drain_columns()
+                events: Optional[List[Event]] = None
                 for s in self._sinks:
-                    if s.wants_events:
-                        s.on_events(node_events)
+                    if s.wants_events:  # compat sinks: materialise ONCE
+                        if events is None:
+                            events = wire.columns_to_events(node_cols)
+                        s.on_events(events)
                     if s.wants_wire:
-                        s.on_wire(wire.encode_events(
-                            node_events, node_id=h.node_id, seq=0))
-                events.extend(node_events)
+                        s.on_wire(wire.encode_columns(
+                            node_cols, node_id=h.node_id, seq=0))
+                parts.append(node_cols)
+            cols = concat_columns(parts)
             with self._detection_pause():
-                if events:
+                if cols["ts"].shape[0]:
                     # final refit on the full clean prefix: mid-run sweeps
                     # may have fitted before slow layers reached min_events
-                    last = max(e.step for e in events)
-                    train = [
-                        e for e in events
-                        if e.step < last - self.spec.detector.holdoff_steps]
-                    self._backend.fit(train or events)
-                detections = self._backend.update(events)
+                    last = int(cols["step"].max())
+                    train = select_columns(
+                        cols,
+                        cols["step"] < last - self.spec.detector.holdoff_steps)
+                    self._backend.fit(
+                        train if train["ts"].shape[0] else cols)
+                detections = self._backend.update(cols)
         overhead = {h.node_id: h.collector.overhead_stats()
                     for h in self._nodes.values()}
         if self.spec.mode == "stream":

@@ -1,13 +1,13 @@
-"""Per-node agent: periodically flushes a Collector's ring buffer onto the
+"""Per-node agent: periodically flushes a Collector's event table onto the
 wire.
 
 The agent is the node-resident half of the fleet monitor. It owns nothing but
 a reference to the node's `Collector` (the eACGM daemon) and a flush counter;
-each `flush()` drains the ring buffer, rebases timestamps onto the fleet
-epoch, and returns a wire-encoded `EventBatch`. Dropped-event counts are
-carried per batch so the aggregator can account for ring-buffer overruns
-(paper: bounded-memory perf buffers) without trusting the stream to be
-complete.
+each `flush()` drains the columnar event table, rebases timestamps onto the
+fleet epoch, and returns a wire-encoded `EventBatch` — columns in, columns
+out, zero `Event` objects. Dropped-event counts are carried per batch so the
+aggregator can account for ring overruns (paper: bounded-memory perf
+buffers) without trusting the stream to be complete.
 """
 from __future__ import annotations
 
@@ -39,10 +39,12 @@ class NodeAgent:
         self._last_dropped = 0
 
     def flush(self) -> bytes:
-        """Drain the ring buffer and return one wire-encoded batch."""
-        events = self.collector.drain()
-        cols = wire.events_to_columns(events)
-        if self.ts_offset and len(events):
+        """Drain the event table and return one wire-encoded batch.
+
+        Columnar end to end: the drained `EventTable` views ARE the wire
+        columns — no `Event` objects are materialised."""
+        cols = self.collector.drain_columns()
+        if self.ts_offset and cols["ts"].shape[0]:
             cols["ts"] = cols["ts"] + self.ts_offset
         total_dropped = self.collector.buffer.dropped
         batch = wire.EventBatch(

@@ -26,13 +26,12 @@ import jax
 import numpy as np
 
 from repro.core.events import Layer
+from repro.core.features import (COLLECTIVE_FEATURES, DEVICE_FEATURES,
+                                 LATENCY_FEATURES, baseline_for,
+                                 name_medians, raw_feature_matrix)
 from repro.core.gmm import (GMMParams, fit_gmm_streaming, score_samples,
                             total_log_likelihood)
 from repro.stream.window import FleetAggregator, LayerWindow
-
-LATENCY_FEATURES = ("log_dur_us", "rel_dur", "log_bytes")
-COLLECTIVE_FEATURES = ("log_lat_us", "rel_dur", "log_bytes", "log_bw")
-DEVICE_FEATURES = ("util", "mem_gb", "power_w", "temp_c")
 
 
 @dataclasses.dataclass
@@ -85,44 +84,25 @@ class _LayerState:
 def _raw_features(layer: Layer, v: Dict[str, np.ndarray]
                   ) -> Optional[WindowFeatures]:
     """Window columns -> unbaselined feature matrix (rel_dur column zeroed;
-    the caller fills it from fitted per-name medians)."""
+    the caller fills it from fitted per-name medians). The matrix itself
+    comes from the SAME `core.features.raw_feature_matrix` the batch path
+    uses — batch and stream cannot drift apart."""
     names = v["name"]
-    keep = ~np.char.startswith(names.astype(str), "static/")
-    if layer == Layer.DEVICE:
-        keep &= ~np.isnan(v["util"])
-        if not keep.any():
-            return None
-        X = np.stack([v[k][keep] for k in DEVICE_FEATURES], axis=1)
-    else:
-        if not keep.any():
-            return None
-        dur = v["dur"][keep]
-        size = v["size"][keep]
-        log_dur = np.log1p(dur * 1e6)
-        cols = [log_dur, np.zeros_like(log_dur), np.log1p(size)]
-        if layer == Layer.COLLECTIVE:
-            bw = np.where(dur > 0, size / np.maximum(dur, 1e-9), 0.0)
-            cols.append(np.log1p(bw))
-        X = np.stack(cols, axis=1)
+    keep = np.flatnonzero(
+        ~np.char.startswith(names.astype(str, copy=False), "static/"))
+    raw = raw_feature_matrix(layer, v, keep)
+    if raw is None:
+        return None
+    X, keep = raw
     return WindowFeatures(layer=layer, X=X, steps=v["step"][keep],
                           nodes=v["node"][keep], ts=v["ts"][keep],
                           names=names[keep])
 
 
-def _name_medians(names: np.ndarray, log_dur: np.ndarray
-                  ) -> Tuple[Dict[str, float], float]:
-    medians: Dict[str, float] = {}
-    for name in np.unique(names):
-        medians[str(name)] = float(np.median(log_dur[names == name]))
-    return medians, float(np.median(log_dur))
-
-
 def _apply_baseline(fs: WindowFeatures, medians: Dict[str, float],
                     global_median: float) -> None:
     """Fill rel_dur (column 1) = log_dur - fitted per-name median."""
-    uniq, inv = np.unique(fs.names, return_inverse=True)
-    base = np.array([medians.get(str(n), global_median) for n in uniq])[inv]
-    fs.X[:, 1] = fs.X[:, 0] - base
+    fs.X[:, 1] = fs.X[:, 0] - baseline_for(fs.names, medians, global_median)
 
 
 class OnlineGMMDetector:
@@ -196,7 +176,7 @@ class OnlineGMMDetector:
         if layer == Layer.DEVICE:
             medians, gmed = {}, 0.0
         else:
-            medians, gmed = _name_medians(fs.names, fs.X[:, 0])
+            medians, gmed = name_medians(fs.names, fs.X[:, 0])
             _apply_baseline(fs, medians, gmed)
         mean = fs.X.mean(0)
         std = np.maximum(fs.X.std(0), 1e-9)

@@ -13,12 +13,12 @@ from typing import Dict, Iterable, List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.events import Layer
+from repro.core.events import NAME_DT, NAME_WIDTH, Layer
 from repro.stream import wire
 
 # columns every window keeps (name dtype is fixed-width so the store is flat)
 _F64 = ("ts", "dur", "size") + wire.TELEMETRY_KEYS
-_NAME_DT = np.dtype("<U64")
+_NAME_DT = NAME_DT
 
 
 class LayerWindow:
@@ -38,6 +38,7 @@ class LayerWindow:
         self.horizon_s = float(horizon_s)
         self.n = 0
         self.evicted = 0  # rows dropped (horizon or overflow) over lifetime
+        self.names_truncated = 0  # names clipped to the fixed width
         self.cols: Dict[str, np.ndarray] = {
             k: np.zeros(self.capacity, dtype=np.float64) for k in _F64}
         self.cols["step"] = np.zeros(self.capacity, dtype=np.int64)
@@ -73,7 +74,12 @@ class LayerWindow:
         for k in _F64:
             self.cols[k][lo:hi] = pick(k)
         self.cols["step"][lo:hi] = pick("step")
-        self.cols["name"][lo:hi] = pick("name")
+        incoming = pick("name")
+        if incoming.dtype.itemsize > 4 * NAME_WIDTH:
+            # assignment into the fixed-width store clips: count, don't hide
+            self.names_truncated += int(
+                (np.char.str_len(incoming) > NAME_WIDTH).sum())
+        self.cols["name"][lo:hi] = incoming
         self.cols["node"][lo:hi] = node_id
         self.n = hi
         return n_add
@@ -167,6 +173,10 @@ class FleetAggregator:
             "events_ingested": self.events_ingested,
             "events_dropped_at_source": self.events_dropped_at_source,
             "lost_batches": self.lost_batches,
+            # names clipped to the fixed column width on ingest — nonzero
+            # means kernel names in traces/reports are prefixes
+            "names_truncated": sum(w.names_truncated
+                                   for w in self.windows.values()),
             "window_sizes": {l.value: len(w) for l, w in self.windows.items()
                              if len(w)},
             "t_latest": self.t_latest,

@@ -1,11 +1,11 @@
 """Compact columnar wire format for event batches.
 
-Node agents ship drained ring-buffer contents to the fleet aggregator as
+Node agents ship drained event-table contents to the fleet aggregator as
 *columns*, not objects: one contiguous buffer per field, preceded by a small
-JSON header. Encoding N events costs O(columns) numpy copies (no per-event
-Python work beyond the initial `events_to_arrays` columnarisation), and the
-receiver can ingest the columns straight into its preallocated sliding
-windows without ever materialising `Event` objects.
+JSON header. Since the columnar redesign the drained `EventTable` columns ARE
+the wire schema — encoding is O(columns) buffer copies with no per-event
+Python work at all, and the receiver ingests the columns straight into its
+preallocated sliding windows without ever materialising `Event` objects.
 
 Layout (little-endian):
 
@@ -15,12 +15,13 @@ Layout (little-endian):
 The header records node_id / seq / t_base / dropped plus, per column, the
 dtype string and shape needed to reinterpret the raw bytes. String columns
 travel as fixed-width unicode (``<U#``) — wasteful for long names but
-trivially seekable; event names in this system are short symbol names.
+trivially seekable; event names in this system are short symbol names (and
+clips past ``events.NAME_WIDTH`` are *counted*, never silent — see
+`EventTable.names_truncated` / `LayerWindow.names_truncated`).
 
-Device-layer telemetry (util/mem_gb/power_w/temp_c, carried in ``Event.meta``)
-is lifted into four dedicated float64 columns at encode time so the aggregator
-never parses JSON per event; any *other* meta keys ride in an optional
-JSON-lines column that is empty for typical batches.
+Device-layer telemetry (util/mem_gb/power_w/temp_c) lives in four dedicated
+float64 columns end to end; any *other* metadata rides in a JSON-lines
+column that is empty for typical batches.
 """
 from __future__ import annotations
 
@@ -31,22 +32,31 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.events import Event, Layer, empty_arrays, events_to_arrays
+# Columnar conversion + schema constants live with the event model now;
+# re-exported here because this module was their original home.
+from repro.core.events import (LAYER_CODE, LAYERS, TELEMETRY_KEYS,  # noqa: F401
+                               Event, Layer, columns_to_events, empty_arrays,
+                               empty_columns, events_to_arrays,
+                               events_to_columns)
 
 MAGIC = b"EACS"
 VERSION = 1
 
-# Layer enum <-> wire code (int8). Order is the Layer declaration order and
-# must stay append-only for cross-version compatibility.
-LAYERS = tuple(Layer)
-LAYER_CODE = {layer: np.int8(i) for i, layer in enumerate(LAYERS)}
-
-# meta keys promoted to dedicated columns (device telemetry hot path)
-TELEMETRY_KEYS = ("util", "mem_gb", "power_w", "temp_c")
-
 # wire columns in serialization order
 WIRE_COLUMNS = ("layer", "name", "ts", "dur", "size", "pid", "tid", "step",
                 "util", "mem_gb", "power_w", "temp_c", "meta")
+
+
+class WireVersionError(ValueError):
+    """Decoded batch speaks a different wire version than this build."""
+
+    def __init__(self, got: int, supported: int):
+        super().__init__(
+            f"wire version mismatch: batch has version {got}, this build "
+            f"supports version {supported} only — re-encode the batch or "
+            f"upgrade the peer")
+        self.got = got
+        self.supported = supported
 
 
 @dataclasses.dataclass
@@ -69,71 +79,16 @@ class EventBatch:
         return sum(int(c.nbytes) for c in self.columns.values())
 
 
-def events_to_columns(events: List[Event]) -> Dict[str, np.ndarray]:
-    """Extend the core columnar schema with wire-only columns: int8 layer
-    codes, pid/tid, telemetry columns, and a JSON column for residual meta."""
-    n = len(events)
-    if n == 0:
-        cols = {k: v for k, v in empty_arrays().items() if k != "layer"}
-        cols.update({
-            "layer": np.empty(0, dtype=np.int8),
-            "pid": np.empty(0, dtype=np.int64),
-            "tid": np.empty(0, dtype=np.int64),
-            "meta": np.empty(0, dtype="<U1"),
-        })
-        for k in TELEMETRY_KEYS:
-            cols[k] = np.empty(0, dtype=np.float64)
-        return cols
-    base = events_to_arrays(events)
-    cols: Dict[str, np.ndarray] = {
-        "layer": np.array([LAYER_CODE[e.layer] for e in events], dtype=np.int8),
-        "name": base["name"],
-        "ts": base["ts"],
-        "dur": base["dur"],
-        "size": base["size"],
-        "pid": np.array([e.pid for e in events], dtype=np.int64),
-        "tid": np.array([e.tid for e in events], dtype=np.int64),
-        "step": base["step"],
-    }
-    for k in TELEMETRY_KEYS:
-        cols[k] = np.array(
-            [float((e.meta or {}).get(k, np.nan)) for e in events],
-            dtype=np.float64)
-    residual: List[str] = []
-    for e in events:
-        extra = {k: v for k, v in (e.meta or {}).items()
-                 if k not in TELEMETRY_KEYS}
-        residual.append(json.dumps(extra, separators=(",", ":"),
-                                   default=str) if extra else "")
-    cols["meta"] = np.array(residual)
-    return cols
+def _wire_ready(col: np.ndarray) -> np.ndarray:
+    """Fixed-dtype, contiguous view of a column for raw serialization.
 
-
-def columns_to_events(cols: Dict[str, np.ndarray]) -> List[Event]:
-    """Inverse of events_to_columns (used by tests and trace export)."""
-    out: List[Event] = []
-    n = int(cols["ts"].shape[0])
-    for i in range(n):
-        meta: Optional[Dict[str, Any]] = None
-        telemetry = {k: float(cols[k][i]) for k in TELEMETRY_KEYS
-                     if not np.isnan(cols[k][i])}
-        if telemetry:
-            meta = telemetry
-        raw = str(cols["meta"][i])
-        if raw:
-            meta = dict(meta or {}, **json.loads(raw))
-        out.append(Event(
-            layer=LAYERS[int(cols["layer"][i])],
-            name=str(cols["name"][i]),
-            ts=float(cols["ts"][i]),
-            dur=float(cols["dur"][i]),
-            size=float(cols["size"][i]),
-            pid=int(cols["pid"][i]),
-            tid=int(cols["tid"][i]),
-            step=int(cols["step"][i]),
-            meta=meta,
-        ))
-    return out
+    EventTable stores the ``meta`` column as object dtype (variable-length
+    JSON strings); on the wire it becomes fixed-width unicode."""
+    if col.dtype == object:
+        col = col.astype(str) if col.shape[0] else np.empty(0, "<U1")
+        if col.dtype.itemsize == 0:  # all-empty strings -> <U0 is unportable
+            col = col.astype("<U1")
+    return np.ascontiguousarray(col)
 
 
 def encode(batch: EventBatch) -> bytes:
@@ -141,7 +96,7 @@ def encode(batch: EventBatch) -> bytes:
     parts: List[bytes] = []
     colspec = []
     for name in WIRE_COLUMNS:
-        col = np.ascontiguousarray(batch.columns[name])
+        col = _wire_ready(batch.columns[name])
         raw = col.tobytes()
         colspec.append({"name": name, "dtype": col.dtype.str,
                         "n": int(col.shape[0]), "nbytes": len(raw)})
@@ -156,13 +111,16 @@ def encode(batch: EventBatch) -> bytes:
 
 
 def decode(buf: bytes) -> EventBatch:
-    """Wire bytes -> EventBatch. Validates magic/version and column sizes."""
+    """Wire bytes -> EventBatch. Validates magic/version and column sizes.
+
+    Raises `WireVersionError` on ANY version mismatch (older or newer): the
+    header layout beyond the version field is version-specific, so a
+    mismatched struct unpack would silently misparse."""
     if buf[:4] != MAGIC:
         raise ValueError(f"bad magic {buf[:4]!r}")
     version, hlen = struct.unpack_from("<HI", buf, 4)
-    if version > VERSION:
-        raise ValueError(f"wire version {version} newer than supported "
-                         f"{VERSION}")
+    if version != VERSION:
+        raise WireVersionError(version, VERSION)
     off = 10
     header = json.loads(buf[off:off + hlen].decode())
     off += hlen
@@ -183,9 +141,15 @@ def decode(buf: bytes) -> EventBatch:
                       columns=columns)
 
 
+def encode_columns(cols: Dict[str, np.ndarray], *, node_id: int, seq: int,
+                   t_base: float = 0.0, dropped: int = 0) -> bytes:
+    """ColumnView -> wire bytes (the native path: no Event objects)."""
+    return encode(EventBatch(node_id=node_id, seq=seq, t_base=t_base,
+                             columns=cols, dropped=dropped))
+
+
 def encode_events(events: List[Event], *, node_id: int, seq: int,
                   t_base: float = 0.0, dropped: int = 0) -> bytes:
-    """Convenience: Event list -> wire bytes in one call."""
-    return encode(EventBatch(node_id=node_id, seq=seq, t_base=t_base,
-                             columns=events_to_columns(events),
-                             dropped=dropped))
+    """Convenience: Event list -> wire bytes in one call (compat path)."""
+    return encode_columns(events_to_columns(events), node_id=node_id,
+                          seq=seq, t_base=t_base, dropped=dropped)

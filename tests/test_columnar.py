@@ -1,0 +1,403 @@
+"""Columnar-native event path: EventTable semantics, object/columnar feature
+parity, the no-Event-objects hot-path guarantee, name-truncation accounting,
+and wire version handling."""
+import json
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.collector import Collector
+from repro.core.events import (NAME_WIDTH, Event, EventTable, Layer,
+                               RingBuffer, columns_to_events, concat_columns,
+                               events_to_columns, select_columns)
+from repro.core.features import (LayerFeaturizer, build_features,
+                                 per_name_gaps)
+from repro.core.probes import Probe
+from repro.session import MonitorSpec, Session
+from repro.session.spec import DetectorSpec
+from repro.stream import wire
+from repro.stream.window import FleetAggregator
+
+ALL_LAYERS = (Layer.XLA, Layer.PYTHON, Layer.OPERATOR, Layer.COLLECTIVE,
+              Layer.DEVICE, Layer.STEP)
+
+
+def _fixture_events(n_steps=40, seed=0):
+    """Recorded-style fixture covering every monitored layer, with per-name
+    duration structure, device telemetry, static/ records, and meta."""
+    rng = np.random.default_rng(seed)
+    evs = []
+    evs.append(Event(layer=Layer.OPERATOR, name="static/while/dot_general",
+                     ts=0.0, size=1e6, meta={"flops": 1e9, "shape": "(8, 8)"}))
+    evs.append(Event(layer=Layer.COLLECTIVE, name="static/all-reduce",
+                     ts=0.0, size=1 << 20, meta={"shape": "[256]"}))
+    for s in range(n_steps):
+        t = 0.02 * s
+        evs.append(Event(layer=Layer.STEP, name="train_step", ts=t,
+                         dur=5e-3 * rng.lognormal(0, 0.04), step=s, pid=11))
+        evs.append(Event(layer=Layer.XLA, name="executable_run", ts=t,
+                         dur=4e-3 * rng.lognormal(0, 0.04), step=s, pid=11))
+        evs.append(Event(layer=Layer.PYTHON, name="repro.data.next_batch",
+                         ts=t, dur=2e-4 * rng.lognormal(0, 0.1), step=s,
+                         tid=7))
+        for j, op in enumerate(("dot_general", "add", "reduce_sum")):
+            evs.append(Event(layer=Layer.OPERATOR, name=op, ts=t + 1e-4 * j,
+                             dur=float((j + 1) * 1e-4 * rng.lognormal(0, 0.05)),
+                             size=1e5 * (j + 1), step=s, pid=11))
+        evs.append(Event(layer=Layer.COLLECTIVE, name="all-reduce", ts=t,
+                         dur=2e-3 * rng.lognormal(0, 0.05), size=1 << 20,
+                         step=s))
+        evs.append(Event(layer=Layer.DEVICE, name="tpu0", ts=t,
+                         size=2.0 * 2 ** 30, step=s,
+                         meta={"util": float(rng.uniform(60, 90)),
+                               "mem_gb": 2.0, "power_w": 200.0,
+                               "temp_c": 55.0}))
+        if s % 10 == 0:  # host-truth rows carry residual (non-telemetry) meta
+            evs.append(Event(layer=Layer.DEVICE, name="host.process", ts=t,
+                             size=1e9, meta={"cpu_pct": 42.0, "threads": 8}))
+    return evs
+
+
+def _table_from(events, capacity=65536):
+    table = EventTable(capacity)
+    for e in events:
+        table.push(e)
+    return table
+
+
+# ---------------------------------------------------------------------------
+# EventTable semantics
+# ---------------------------------------------------------------------------
+
+def test_event_table_round_trips_events():
+    evs = _fixture_events(8)
+    back = _table_from(evs).drain()
+    assert len(back) == len(evs)
+    for a, b in zip(evs, back):
+        assert (a.layer, a.name, a.ts, a.dur, a.size, a.pid, a.tid,
+                a.step) == (b.layer, b.name, b.ts, b.dur, b.size, b.pid,
+                            b.tid, b.step)
+        assert a.meta == b.meta  # telemetry lift + residual JSON merge back
+
+
+def test_event_table_overwrites_oldest_and_counts_drops():
+    t = EventTable(capacity=8)
+    for i in range(20):
+        t.append_rows(Layer.STEP, f"e{i}", float(i))
+    assert len(t) == 8 and t.pushed == 20 and t.dropped == 12
+    cols = t.drain_columns()
+    assert list(cols["name"]) == [f"e{i}" for i in range(12, 20)]
+    assert len(t) == 0
+    # block append larger than capacity keeps the newest rows
+    t.append_rows(Layer.STEP, np.array([f"b{i}" for i in range(11)]),
+                  ts=np.arange(11.0))
+    assert list(t.drain_columns()["name"]) == [f"b{i}" for i in range(3, 11)]
+
+
+def test_event_table_block_append_wraps():
+    t = EventTable(capacity=10)
+    t.append_rows(Layer.XLA, np.array(["a"] * 7), ts=np.arange(7.0))
+    t.drain_columns()
+    # head is at 7; a 6-row block must wrap around the end of the ring
+    t.append_rows(Layer.XLA, np.array([f"w{i}" for i in range(6)]),
+                  ts=10.0 + np.arange(6.0), step=np.arange(6))
+    cols = t.drain_columns()
+    assert list(cols["name"]) == [f"w{i}" for i in range(6)]
+    np.testing.assert_array_equal(cols["ts"], 10.0 + np.arange(6.0))
+    np.testing.assert_array_equal(cols["step"], np.arange(6))
+
+
+def test_concat_and_select_columns():
+    a = events_to_columns(_fixture_events(4, seed=0))
+    b = events_to_columns(_fixture_events(4, seed=1))
+    both = concat_columns([a, b])
+    assert both["ts"].shape[0] == a["ts"].shape[0] + b["ts"].shape[0]
+    sel = select_columns(both, both["step"] >= 2)
+    assert (sel["step"] >= 2).all()
+
+
+# ---------------------------------------------------------------------------
+# columnar/object feature parity (satellite: recorded-fixture test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layer", ALL_LAYERS)
+def test_build_features_table_matches_event_list(layer):
+    evs = _fixture_events()
+    cols = _table_from(evs).drain_columns()
+    fs_obj = build_features(evs, layer)  # legacy List[Event] path
+    fs_col = build_features(cols, layer)  # native columnar path
+    assert fs_obj is not None and fs_col is not None
+    assert fs_obj.X.dtype == fs_col.X.dtype
+    assert fs_obj.X.tobytes() == fs_col.X.tobytes()  # byte-identical
+    np.testing.assert_array_equal(fs_obj.steps, fs_col.steps)
+    np.testing.assert_array_equal(fs_obj.ts, fs_col.ts)
+    assert [str(n) for n in fs_obj.event_names] == \
+        [str(n) for n in fs_col.event_names]
+    assert fs_obj.names == fs_col.names
+
+
+def test_layer_featurizer_parity_and_transform():
+    evs = _fixture_events()
+    cols = _table_from(evs).drain_columns()
+    for layer in (Layer.OPERATOR, Layer.STEP):
+        f_obj = LayerFeaturizer(layer).fit(evs)
+        f_col = LayerFeaturizer(layer).fit(cols)
+        assert f_obj.medians == f_col.medians
+        assert f_obj.global_median == f_col.global_median
+        t_obj = f_obj.transform(evs)
+        t_col = f_col.transform(cols)
+        assert t_obj.X.tobytes() == t_col.X.tobytes()
+
+
+def test_per_name_gaps_matches_sequential_loop():
+    rng = np.random.default_rng(3)
+    ts = np.sort(rng.uniform(0, 10, 200))
+    names = rng.choice(np.array(["a", "b", "c"]), 200)
+    got = per_name_gaps(ts, names)
+    last = {}
+    want = np.zeros_like(ts)
+    for i, (t, n) in enumerate(zip(ts, names)):
+        want[i] = t - last.get(n, t)
+        last[n] = t
+    np.testing.assert_allclose(got, want)
+
+
+# ---------------------------------------------------------------------------
+# no Event objects on the steady-state hot path (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def event_counter(monkeypatch):
+    counts = {"n": 0}
+    orig = Event.__init__
+
+    def counting(self, *args, **kwargs):
+        counts["n"] += 1
+        orig(self, *args, **kwargs)
+
+    monkeypatch.setattr(Event, "__init__", counting)
+    return counts
+
+
+def _probe_spec(mode, **det):
+    return MonitorSpec(
+        mode=mode, probes=["xla", "operator", "collective", "device", "step"],
+        probe_options={"device": {"interval": 0.02}},
+        detector=DetectorSpec(min_events=16, **det))
+
+
+@pytest.mark.parametrize("mode", ["batch", "stream"])
+def test_no_event_objects_on_hot_path(mode, event_counter):
+    """probe emit -> drain -> features -> score constructs ZERO Event
+    objects, in both batch and stream mode (no event-materialising sinks)."""
+    spec = _probe_spec(mode, sweep_every=10, flush_every=10, holdoff_steps=3)
+    session = Session(spec)
+
+    @jax.jit
+    def step(x):
+        return (x @ jnp.sin(x)) / jnp.maximum(jnp.abs(x).sum(), 1.0)
+
+    x = jnp.ones((16, 16))
+    saw_detections = False
+    with session.monitoring():
+        fn = session.observe_step_fn(step, sample_args=(x,))
+        for s in range(25):
+            x = fn(x)
+            if mode == "stream" and s == 12:
+                session.warmup()
+            out = session.on_step(s)
+            saw_detections |= bool(out.detections)
+    report = session.result()
+    assert saw_detections
+    assert Layer.STEP.value in report.layers
+    assert event_counter["n"] == 0, (
+        f"{event_counter['n']} Event objects constructed on the hot path")
+
+
+def test_third_party_event_probe_still_works(event_counter):
+    """RingBuffer-era probes (scalar emit(Event)) keep working against the
+    columnar collector — the compat shim, exercised end to end."""
+
+    class LegacyProbe(Probe):
+        name = "legacy"
+
+        def _attach(self):
+            pass
+
+        def _detach(self):
+            pass
+
+        def fire(self, i):
+            self.emit(Event(layer=Layer.PYTHON, name=f"legacy_call{i % 3}",
+                            ts=0.01 * i, dur=1e-4 * (1 + i % 4),
+                            meta={"custom": "yes"}))
+
+    probe = LegacyProbe()
+    col = Collector([probe], capacity=1024)
+    with col.monitoring():
+        for i in range(32):
+            probe.fire(i)
+    assert probe.emitted == 32
+    assert event_counter["n"] >= 32  # objects ARE constructed here (shim)
+    evs = col.drain()
+    assert len(evs) == 32
+    assert evs[0].meta == {"custom": "yes"}  # residual meta survives
+    fs = build_features(col.snapshot_columns(), Layer.PYTHON)
+    assert fs is None  # drained
+    # ... and emit_rows against a legacy RingBuffer sink materialises Events
+    rb = RingBuffer(64)
+    probe2 = LegacyProbe()
+    probe2.attach(rb)
+    probe2.emit_rows(Layer.OPERATOR, np.array(["a", "b"]),
+                     ts=np.array([0.1, 0.2]), dur=np.array([1e-3, 2e-3]),
+                     step=4)
+    out = rb.drain()
+    assert [e.name for e in out] == ["a", "b"]
+    assert out[0].step == 4 and out[1].dur == 2e-3
+    # empty row blocks are a no-op on BOTH sink kinds (no-samples ticks)
+    assert probe2.emit_rows(Layer.OPERATOR, np.array([], dtype="<U8"),
+                            ts=np.array([])) == 0
+    assert len(rb.drain()) == 0
+
+
+# ---------------------------------------------------------------------------
+# name truncation is counted, never silent (satellite)
+# ---------------------------------------------------------------------------
+
+LONG_KERNEL = ("fusion/jit_train_step/while/body/transformer/layer_07/"
+               "mlp/dot_general_fused_multiply_add_activation_epilogue")
+
+
+def test_event_table_counts_name_truncation():
+    assert len(LONG_KERNEL) > NAME_WIDTH
+    t = EventTable(64)
+    t.append_rows(Layer.XLA, LONG_KERNEL, 0.0)
+    t.append_rows(Layer.XLA, np.array([LONG_KERNEL, "short"]),
+                  ts=np.array([1.0, 2.0]))
+    assert t.names_truncated == 2
+    names = t.drain_columns()["name"]
+    assert str(names[0]) == LONG_KERNEL[:NAME_WIDTH]
+    col = Collector([], capacity=16)
+    col.buffer.append_rows(Layer.XLA, LONG_KERNEL, 0.0)
+    assert col.overhead_stats()["names_truncated"] == 1
+
+
+def test_truncation_counts_every_broadcast_row():
+    """A clipped scalar name filled across an n-row block stores n clipped
+    rows, so the counter must say n, not 1."""
+    t = EventTable(64)
+    t.append_rows(Layer.OPERATOR, LONG_KERNEL, ts=np.arange(5.0))
+    assert t.names_truncated == 5
+
+
+def test_low_headroom_drain_returns_stable_copies():
+    """Draining a (near-)full ring hands back copies, not views: the very
+    next append would otherwise overwrite the drained region mid-consume
+    (torn rows under the device probe's background thread)."""
+    t = EventTable(capacity=16)
+    for i in range(16):
+        t.append_rows(Layer.STEP, f"e{i}", float(i))
+    cols = t.drain_columns()
+    assert all(v.base is None for v in cols.values())  # owned, not views
+    t.append_rows(Layer.STEP, "overwriter", 99.0)  # lands where e0 lived
+    assert list(cols["name"]) == [f"e{i}" for i in range(16)]
+    assert cols["ts"][0] == 0.0
+
+
+def test_event_table_read_under_python_probe_does_not_deadlock():
+    """The locked low-headroom copy path must stay free of Python-level
+    calls: the python probe's profile hook fires on frames finishing inside
+    the lock and its emit -> append_rows re-enters the non-reentrant lock
+    (the RingBuffer read deadlock, columnar edition). Subprocess + timeout
+    so a regression fails instead of hanging the suite."""
+    import subprocess
+    import sys as _sys
+
+    script = """
+import sys
+sys.path.insert(0, "src")
+from repro.core.events import EventTable, Layer
+from repro.core.probes import PythonProbe
+t = EventTable(10_000)  # small: reads take the locked-copy path
+for i in range(20_000):
+    t.append_rows(Layer.PYTHON, f"f{i % 7}", float(i))
+probe = PythonProbe(include=("repro",), sample_every=1)
+probe.attach(t)
+snap = len(t.snapshot_columns()["ts"])
+drained = len(t.drain_columns()["ts"])
+probe.detach()
+assert snap == 10_000 and drained == 10_000, (snap, drained)
+print("OK", snap, drained)
+"""
+    out = subprocess.run([_sys.executable, "-c", script],
+                         capture_output=True, text=True, cwd=".", timeout=120)
+    assert out.returncode == 0, (out.stdout, out.stderr)
+    assert "OK" in out.stdout
+
+
+def test_collective_probe_accepts_legacy_rng():
+    import random
+
+    from repro.core.probes.collective_probe import CollectiveProbe
+
+    probe = CollectiveProbe()
+    table = EventTable(256)
+    probe.attach(table)
+    probe.register_compiled(
+        "  %ar = f32[4096]{0} all-reduce(%g), replica_groups={}\n")
+    probe.drop_prob = 0.5
+    total = probe.observe_step(0, ts=0.1, rng=random.Random(7))
+    assert total > 0.0
+    live = table.drain_columns()
+    assert "all-reduce" in set(str(n) for n in live["name"])
+
+
+def test_aggregator_surfaces_wire_truncations():
+    evs = [Event(layer=Layer.XLA, name=LONG_KERNEL, ts=0.01 * i, dur=1e-4,
+                 step=i) for i in range(5)]
+    evs.append(Event(layer=Layer.XLA, name="ok", ts=1.0, dur=1e-4, step=5))
+    agg = FleetAggregator()
+    # legacy encode ships natural-width names; the window clips on ingest
+    agg.ingest(wire.encode_events(evs, node_id=0, seq=0))
+    stats = agg.stats()
+    assert stats["names_truncated"] == 5
+    window_names = agg.window(Layer.XLA).view()["name"]
+    assert str(window_names[0]) == LONG_KERNEL[:NAME_WIDTH]
+    assert str(window_names[-1]) == "ok"
+
+
+# ---------------------------------------------------------------------------
+# wire version handling (satellite)
+# ---------------------------------------------------------------------------
+
+def test_wire_version_mismatch_raises_named_error():
+    buf = wire.encode_events(_fixture_events(2), node_id=0, seq=0)
+    assert wire.decode(buf) is not None  # sanity: intact round trip
+    for bad_version in (0, wire.VERSION + 1, 999):
+        corrupted = (buf[:4] + struct.pack("<H", bad_version) + buf[6:])
+        with pytest.raises(wire.WireVersionError) as exc:
+            wire.decode(corrupted)
+        assert str(bad_version) in str(exc.value)
+        assert str(wire.VERSION) in str(exc.value)
+        assert exc.value.got == bad_version
+        assert exc.value.supported == wire.VERSION
+    # WireVersionError subclasses ValueError: existing catch-alls still work
+    assert issubclass(wire.WireVersionError, ValueError)
+
+
+def test_wire_columnar_encode_round_trip():
+    """EventTable columns (object-dtype meta) -> wire -> columns -> events."""
+    evs = _fixture_events(6)
+    cols = _table_from(evs).drain_columns()
+    buf = wire.encode_columns(cols, node_id=2, seq=1, dropped=3)
+    batch = wire.decode(buf)
+    assert (batch.node_id, batch.seq, batch.dropped) == (2, 1, 3)
+    back = columns_to_events(batch.columns)
+    assert len(back) == len(evs)
+    for a, b in zip(evs, back):
+        assert (a.layer, a.name, a.ts, a.step) == (b.layer, b.name, b.ts,
+                                                   b.step)
+        assert a.meta == b.meta
