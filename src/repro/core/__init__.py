@@ -13,4 +13,6 @@ from repro.core.gmm import GMM, GMMParams, fit_gmm, score_samples, detect_anomal
 from repro.core.chaos import (Fault, FaultInjector, Scenario,  # noqa: F401
                               get_scenario, register_scenario,
                               scenario_names)
-from repro.core.governor import Action, Governor  # noqa: F401
+from repro.core.governor import (Action, Governor,  # noqa: F401
+                                 Policy, policy_for,
+                                 register_policy)

@@ -29,6 +29,9 @@ class DetectionResult:
     # (N,) event timestamps (seconds, collector clock); None when the feature
     # pipeline did not carry them. Lets callers measure time-to-detect.
     ts: Optional[np.ndarray] = None
+    # (N,) node ids (from the pid column, session-rewritten to node ids);
+    # lets the incident engine attribute batch flags to fleet members
+    nodes: Optional[np.ndarray] = None
 
     @property
     def anomaly_rate(self) -> float:
@@ -106,5 +109,6 @@ class FullStackMonitor:
             scores = det.score(fs.X)
             out[layer] = DetectionResult(
                 layer=layer, flags=scores < det.log_delta, scores=scores,
-                log_delta=det.log_delta, steps=fs.steps, ts=fs.ts)
+                log_delta=det.log_delta, steps=fs.steps, ts=fs.ts,
+                nodes=fs.nodes)
         return out

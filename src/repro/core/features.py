@@ -43,6 +43,10 @@ class FeatureSet:
     # (N,) source event timestamps (seconds, collector clock); carried so
     # detection results can report WHEN a flag fired, not just at which step
     ts: Optional[np.ndarray] = None
+    # (N,) node id per row (the pid column, which the session rewrites to
+    # node ids at drain time) — lets batch detections attribute flags to
+    # fleet members the way streaming WindowDetections do
+    nodes: Optional[np.ndarray] = None
 
 
 def ensure_columns(data: EventsOrColumns) -> ColumnView:
@@ -169,9 +173,10 @@ def build_features(data: EventsOrColumns, layer: Layer
     names = cols["name"][idx]
     steps = cols["step"][idx].astype(np.int64, copy=False)
     ts = cols["ts"][idx]
+    nodes = cols["pid"][idx] if "pid" in cols else None
     if layer == Layer.DEVICE:
         return FeatureSet(layer, X, steps, list(DEVICE_FEATURES), names,
-                          ts=ts)
+                          ts=ts, nodes=nodes)
     medians, gmed = name_medians(names, X[:, 0])
     X[:, 1] = X[:, 0] - baseline_for(names, medians, gmed)
     # NOTE: inter-arrival gaps (per_name_gaps) and name-frequency features
@@ -180,7 +185,8 @@ def build_features(data: EventsOrColumns, layer: Layer
     # (see tests).
     feat_names = (COLLECTIVE_FEATURES if layer == Layer.COLLECTIVE
                   else LATENCY_FEATURES)
-    return FeatureSet(layer, X, steps, list(feat_names), names, ts=ts)
+    return FeatureSet(layer, X, steps, list(feat_names), names, ts=ts,
+                      nodes=nodes)
 
 
 class LayerFeaturizer:
@@ -212,7 +218,7 @@ class LayerFeaturizer:
         X[:, 1] = fs.X[:, 0] - baseline_for(fs.event_names, self.medians,
                                             self.global_median)
         return FeatureSet(fs.layer, X, fs.steps, fs.names, fs.event_names,
-                          ts=fs.ts)
+                          ts=fs.ts, nodes=fs.nodes)
 
     def fit_transform(self, data: EventsOrColumns) -> Optional[FeatureSet]:
         if self.fit(data) is None:

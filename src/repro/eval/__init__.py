@@ -6,7 +6,8 @@ scenarios) and detection (`repro.session.Session`):
 
     scenario --FaultInjector--> monitored run --MonitorReport-->
         step predictions --metrics--> precision/recall/F1, time-to-detect,
-        false-alarm rate --matrix--> scenario_matrix.json + leaderboard.md
+        false-alarm rate, diagnosis accuracy (blamed kind / node / action)
+        --matrix--> scenario_matrix.json + leaderboard.md
 
 Entry points:
     python -m repro.launch.evaluate --scenarios all --out results/eval/
@@ -16,8 +17,10 @@ Entry points:
 See docs/evaluation.md for the methodology and the documented false-alarm
 ceiling of the clean-control scenario.
 """
-from repro.eval.metrics import (DetectionMetrics, debounce,  # noqa: F401
-                                detection_metrics, step_predictions)
+from repro.eval.metrics import (DetectionMetrics,  # noqa: F401
+                                DiagnosisMetrics, debounce,
+                                detection_metrics, diagnosis_metrics,
+                                step_predictions, window_kinds)
 from repro.eval.runner import EvalConfig, ScenarioRun, run_scenario  # noqa: F401
 from repro.eval.matrix import (CONFIG_GRID, FAR_CEILING,  # noqa: F401
                                render_leaderboard, run_matrix, save_matrix)

@@ -94,6 +94,11 @@ def _row(run) -> Dict[str, object]:
     if im is not None:
         row["incidents"] = {"count": len(run.report.incidents),
                             **im.to_json()}
+    dm = run.diagnosis_metrics()
+    row["diagnosis"] = {
+        "kinds": [d.fault_kind for d in run.report.diagnoses],
+        "actions": [d.action.kind for d in run.report.diagnoses],
+        **dm.to_json()}
     return row
 
 
@@ -103,6 +108,28 @@ def clean_control_far(matrix: Dict[str, object]) -> Optional[float]:
     fars = [r["metrics"]["false_alarm_rate"] for r in matrix["rows"]
             if r["scenario"] == "clean_control"]
     return max(fars) if fars else None
+
+
+def clean_control_diagnoses(matrix: Dict[str, object]) -> Optional[int]:
+    """Total diagnoses emitted on the clean-control scenario across
+    modes/configs — the no-false-diagnosis gate holds this at zero (None
+    when the scenario was not part of the matrix)."""
+    counts = [r["diagnosis"]["diagnoses_total"] for r in matrix["rows"]
+              if r["scenario"] == "clean_control" and "diagnosis" in r]
+    return sum(counts) if counts else None
+
+
+def mean_kind_accuracy(matrix: Dict[str, object]) -> Optional[float]:
+    """Mean blamed-kind accuracy over the FAULTED cells (None when no
+    faulted scenario is present). Cells that produced no diagnoses on a
+    faulted run count as 0; clean-control cells are excluded — a spurious
+    clean diagnosis is already caught by the clean_control_diagnoses gate
+    and must not be double-counted here."""
+    accs = [r["diagnosis"]["kind_accuracy"] for r in matrix["rows"]
+            if "diagnosis" in r
+            and r["diagnosis"]["windows_total"] > 0
+            and r["diagnosis"]["kind_accuracy"] is not None]
+    return float(sum(accs) / len(accs)) if accs else None
 
 
 # -- rendering ----------------------------------------------------------------
@@ -123,8 +150,8 @@ def render_leaderboard(matrix: Dict[str, object]) -> str:
         f"Clean-control false-alarm ceiling: {100 * matrix['far_ceiling']:.0f}%.",
         "",
         "| scenario | workload | mode | config | precision | recall | F1 "
-        "| FAR | TTD (steps) | faults hit |",
-        "|---|---|---|---|---|---|---|---|---|---|",
+        "| FAR | TTD (steps) | faults hit | diag | kind acc | action match |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     rows = sorted(matrix["rows"],
                   key=lambda r: (r["scenario"], r["mode"], r["config"]))
@@ -137,17 +164,30 @@ def render_leaderboard(matrix: Dict[str, object]) -> str:
         # clean-control scenario's headline number
         prf = [_fmt(m[k] if faulty else None, pct=True)
                for k in ("precision", "recall", "f1")]
+        dg = r.get("diagnosis", {})
         lines.append(
             f"| {r['scenario']} | {r['workload']} | {r['mode']} "
             f"| {r['config']} | {prf[0]} | {prf[1]} | {prf[2]} "
             f"| {_fmt(m['false_alarm_rate'], pct=True)} "
-            f"| {_fmt(m['ttd_steps'])} | {faults} |")
+            f"| {_fmt(m['ttd_steps'])} | {faults} "
+            f"| {dg.get('diagnoses_total', 0)} "
+            f"| {_fmt(dg.get('kind_accuracy'), pct=True)} "
+            f"| {_fmt(dg.get('action_match_rate'), pct=True)} |")
     far = clean_control_far(matrix)
     if far is not None:
         verdict = "PASS" if far < matrix["far_ceiling"] else "FAIL"
         lines += ["", f"Clean-control FAR: {100 * far:.1f}% "
                       f"(ceiling {100 * matrix['far_ceiling']:.0f}%) — "
                       f"**{verdict}**"]
+    n_diag = clean_control_diagnoses(matrix)
+    if n_diag is not None:
+        verdict = "PASS" if n_diag == 0 else "FAIL"
+        lines += [f"Clean-control diagnoses: {n_diag} (must be 0) — "
+                  f"**{verdict}**"]
+    acc = mean_kind_accuracy(matrix)
+    if acc is not None:
+        lines += [f"Mean blamed-kind accuracy over faulted cells: "
+                  f"{100 * acc:.1f}%"]
     return "\n".join(lines) + "\n"
 
 

@@ -14,11 +14,12 @@ only: earlier steps are the detector's clean reference window (stream warmup
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core.events import Layer
+from repro.core.governor import policy_for
 
 
 def step_predictions(detections: Dict[Layer, object], n_steps: int,
@@ -162,3 +163,121 @@ def detection_metrics(pred: np.ndarray, labels: np.ndarray,
         ttd_s=float(np.mean(ttds_s)) if ttds_s else None,
         faults_total=len(windows), faults_detected=detected,
         eval_steps=int(region.sum()), anomalous_steps=int(y.sum()))
+
+
+# ---------------------------------------------------------------------------
+# diagnosis scoring (blamed kind / nodes / action vs the injected labels)
+# ---------------------------------------------------------------------------
+
+def window_kinds(faults: Sequence) -> List[Tuple[Tuple[int, int], Set[str]]]:
+    """Merged ``[lo, hi)`` fault windows with the set of injected kinds
+    active in each — the ground truth a diagnosis is scored against.
+    ``faults`` is a `Fault` sequence (``FaultInjector.faults``)."""
+    spans = sorted(((f.start_step, f.end_step, f.kind) for f in faults))
+    merged: List[Tuple[Tuple[int, int], Set[str]]] = []
+    for lo, hi, kind in spans:
+        if merged and lo <= merged[-1][0][1]:
+            (mlo, mhi), kinds = merged[-1]
+            merged[-1] = ((mlo, max(mhi, hi)), kinds | {kind})
+        else:
+            merged.append(((lo, hi), {kind}))
+    return merged
+
+
+@dataclasses.dataclass
+class DiagnosisMetrics:
+    """Diagnosis quality for one scenario run.
+
+    Accuracies are over *emitted* diagnoses: a spurious diagnosis (no
+    overlapping fault window) counts as wrong on every axis, and a faulted
+    run that produced no diagnoses at all scores 0 (undetected is
+    undiagnosed). A clean run with no diagnoses scores None (vacuous).
+    """
+
+    diagnoses_total: int
+    matched: int  # diagnoses overlapping >= 1 fault window
+    spurious: int
+    kind_correct: int  # blamed kind in the overlapped windows' kinds
+    node_correct: int  # blamed nodes intersect the faulted nodes
+    action_correct: int  # recommended action matches the true kind's policy
+    windows_total: int
+    windows_diagnosed: int  # fault windows overlapped by >= 1 diagnosis
+
+    def _rate(self, num: int) -> Optional[float]:
+        if self.diagnoses_total:
+            return num / self.diagnoses_total
+        return None if self.windows_total == 0 else 0.0
+
+    @property
+    def kind_accuracy(self) -> Optional[float]:
+        return self._rate(self.kind_correct)
+
+    @property
+    def node_accuracy(self) -> Optional[float]:
+        return self._rate(self.node_correct)
+
+    @property
+    def action_match_rate(self) -> Optional[float]:
+        return self._rate(self.action_correct)
+
+    @property
+    def coverage(self) -> Optional[float]:
+        return (self.windows_diagnosed / self.windows_total
+                if self.windows_total else None)
+
+    def to_json(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d.update(kind_accuracy=self.kind_accuracy,
+                 node_accuracy=self.node_accuracy,
+                 action_match_rate=self.action_match_rate,
+                 coverage=self.coverage)
+        return d
+
+
+def diagnosis_metrics(diagnoses: Sequence, faults: Sequence,
+                      grace_steps: int = 0,
+                      fault_nodes: Sequence[int] = (0,),
+                      step_clock: Optional[Tuple[np.ndarray, np.ndarray]]
+                      = None) -> DiagnosisMetrics:
+    """Score `repro.diagnosis.Diagnosis` records against the injected
+    schedule. A diagnosis matches window ``[lo, hi)`` when any of its steps
+    lands in ``[lo, hi + grace_steps)`` (same overlap rule as
+    `match_incidents`); its blamed kind is correct when it names any kind
+    injected in a matched window, its action when it matches the policy of
+    any such kind, its nodes when they intersect ``fault_nodes`` (the nodes
+    the chaos schedule perturbed).
+
+    ``step_clock`` is an optional ``(step_ids, ts)`` pair on the collector
+    clock (e.g. the step layer's detection steps/ts): device-layer
+    telemetry carries no step ids, so a device-only diagnosis has no steps
+    of its own and is matched by mapping its ``[t_start, t_end]`` span onto
+    the steps that ran concurrently."""
+    windows = window_kinds(faults)
+    fault_nodes = set(int(n) for n in fault_nodes)
+    matched = spurious = kind_ok = node_ok = action_ok = 0
+    hit_windows: Set[int] = set()
+    for d in diagnoses:
+        steps = set(d.steps)
+        if not steps and step_clock is not None:
+            ids, ts = step_clock
+            span = (ts >= d.t_start) & (ts <= d.t_end)
+            steps = set(int(x) for x in np.asarray(ids)[span])
+        true_kinds: Set[str] = set()
+        for w, ((lo, hi), kinds) in enumerate(windows):
+            if any(lo <= s < hi + grace_steps for s in steps):
+                true_kinds |= kinds
+                hit_windows.add(w)
+        if not true_kinds:
+            spurious += 1
+            continue
+        matched += 1
+        if d.fault_kind in true_kinds:
+            kind_ok += 1
+        if fault_nodes & set(int(n) for n in d.blamed_nodes):
+            node_ok += 1
+        if d.action.kind in {policy_for(k).action for k in true_kinds}:
+            action_ok += 1
+    return DiagnosisMetrics(
+        diagnoses_total=len(diagnoses), matched=matched, spurious=spurious,
+        kind_correct=kind_ok, node_correct=node_ok, action_correct=action_ok,
+        windows_total=len(windows), windows_diagnosed=len(hit_windows))

@@ -31,9 +31,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.chaos import Scenario
-from repro.eval.metrics import (DetectionMetrics, debounce,
-                                detection_metrics, step_predictions)
+from repro.core.chaos import Fault, Scenario
+from repro.eval.metrics import (DetectionMetrics, DiagnosisMetrics, debounce,
+                                detection_metrics, diagnosis_metrics,
+                                step_predictions)
 from repro.session import DetectorSpec, MonitorSpec, Session
 from repro.session.report import MonitorReport
 from repro.stream.incidents import IncidentMatch, match_incidents
@@ -89,6 +90,7 @@ class ScenarioRun:
     eval_start: int
     labels: np.ndarray
     windows: List[Tuple[int, int]]
+    faults: List[Fault]
     step_ts: np.ndarray
     report: MonitorReport
     wall_s: float
@@ -109,6 +111,21 @@ class ScenarioRun:
             return None
         return match_incidents(self.report.incidents, self.windows,
                                grace_steps=grace_steps)
+
+    def diagnosis_metrics(self, grace_steps: int = 4) -> DiagnosisMetrics:
+        """Blamed-kind / blamed-node / action-match scoring of the report's
+        diagnoses against the injected schedule (single-node runs: every
+        fault perturbs node 0). The step layer's detections double as the
+        collector-clock step mapping for step-less (device) diagnoses."""
+        from repro.core.events import Layer
+
+        clock = None
+        det = self.report.detections.get(Layer.STEP)
+        if det is not None and getattr(det, "ts", None) is not None:
+            clock = (np.asarray(det.steps), np.asarray(det.ts))
+        return diagnosis_metrics(self.report.diagnoses, self.faults,
+                                 grace_steps=grace_steps, fault_nodes=(0,),
+                                 step_clock=clock)
 
 
 # -- workloads ----------------------------------------------------------------
@@ -162,7 +179,8 @@ def run_scenario(scenario: Scenario, mode: str,
     return ScenarioRun(
         scenario=scenario, mode=mode, config=cfg, n_steps=n_steps,
         eval_start=eval_start, labels=labels, windows=injector.windows(),
-        step_ts=step_ts, report=session.result(), wall_s=wall)
+        faults=list(injector.faults), step_ts=step_ts,
+        report=session.result(), wall_s=wall)
 
 
 def _drive(session: Session, injector, n_steps: int, eval_start: int,

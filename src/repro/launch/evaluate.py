@@ -4,11 +4,13 @@
         --out results/eval/
 
 Runs the named chaos scenarios through the Session API in batch and stream
-modes, scores detections against the injected ground truth, and writes
-``scenario_matrix.json`` + ``leaderboard.md`` to ``--out``. Exits non-zero
-when the clean-control scenario (if included) breaches the documented
-false-alarm ceiling — CI runs ``--scenarios smoke`` as a detection-quality
-regression gate. See docs/evaluation.md.
+modes, scores detections AND diagnoses against the injected ground truth,
+and writes ``scenario_matrix.json`` + ``leaderboard.md`` to ``--out``.
+Exits non-zero when the clean-control scenario (if included) breaches the
+documented false-alarm ceiling or emits any diagnosis, or when mean
+blamed-kind accuracy over the faulted cells falls below ``--min-kind-acc``
+— CI runs ``--scenarios smoke`` as a detection-and-diagnosis-quality
+regression gate. See docs/evaluation.md and docs/diagnosis.md.
 """
 from __future__ import annotations
 
@@ -17,7 +19,8 @@ import sys
 
 from repro.core.chaos import SMOKE_SCENARIOS, scenario_names
 from repro.eval.matrix import (CONFIG_GRID, FAR_CEILING, MODES,
-                               clean_control_far, render_leaderboard,
+                               clean_control_diagnoses, clean_control_far,
+                               mean_kind_accuracy, render_leaderboard,
                                run_matrix, save_matrix)
 
 
@@ -66,6 +69,9 @@ def main(argv=None) -> int:
     ap.add_argument("--far-ceiling", type=float, default=FAR_CEILING,
                     help="max allowed clean-control false-alarm rate "
                          "(exit 1 above it)")
+    ap.add_argument("--min-kind-acc", type=float, default=0.5,
+                    help="min mean blamed-kind accuracy over faulted cells "
+                         "(exit 1 below it; set 0 to disable)")
     args = ap.parse_args(argv)
 
     scenarios = _resolve_scenarios(args.scenarios)
@@ -87,10 +93,14 @@ def main(argv=None) -> int:
 
     def progress(row):
         m = row["metrics"]
+        dg = row.get("diagnosis", {})
+        acc = dg.get("kind_accuracy")
+        acc_s = f"{100 * acc:5.1f}%" if acc is not None else "    —"
         print(f"[eval] {row['scenario']:<22} {row['mode']:<6} "
               f"{row['config']:<14} F1={100 * m['f1']:5.1f}% "
               f"FAR={100 * m['false_alarm_rate']:5.1f}% "
               f"faults={m['faults_detected']}/{m['faults_total']} "
+              f"diag={dg.get('diagnoses_total', 0)} kind_acc={acc_s} "
               f"({row['wall_s']:.1f}s)")
 
     matrix = run_matrix(scenarios, modes=modes, configs=configs,
@@ -102,13 +112,26 @@ def main(argv=None) -> int:
     print()
     print(render_leaderboard(matrix))
 
+    failed = False
     far = clean_control_far(matrix)
     if far is not None and far >= args.far_ceiling:
         print(f"[eval] FAIL: clean-control false-alarm rate "
               f"{100 * far:.1f}% >= ceiling {100 * args.far_ceiling:.0f}%",
               file=sys.stderr)
-        return 1
-    return 0
+        failed = True
+    n_diag = clean_control_diagnoses(matrix)
+    if n_diag:
+        print(f"[eval] FAIL: {n_diag} diagnosis(es) on the clean-control "
+              "scenario (must be 0 — see docs/diagnosis.md)",
+              file=sys.stderr)
+        failed = True
+    acc = mean_kind_accuracy(matrix)
+    if acc is not None and acc < args.min_kind_acc:
+        print(f"[eval] FAIL: mean blamed-kind accuracy {100 * acc:.1f}% < "
+              f"{100 * args.min_kind_acc:.0f}% (--min-kind-acc)",
+              file=sys.stderr)
+        failed = True
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

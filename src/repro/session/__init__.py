@@ -18,7 +18,8 @@ from repro.session.registry import (build_probe, build_probes,  # noqa: F401
                                     register_sink, sink_kinds)
 from repro.session.detectors import (BatchGMMBackend,  # noqa: F401
                                      Detector, OnlineGMMBackend)
-from repro.session.sinks import (JsonlEventSink, PerfettoSink,  # noqa: F401
+from repro.session.sinks import (IncidentReportSink,  # noqa: F401
+                                 JsonlEventSink, PerfettoSink,
                                  ReportSink, Sink, WireSink,
                                  read_wire_capture)
 from repro.session.report import LayerSummary, MonitorReport  # noqa: F401

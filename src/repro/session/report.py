@@ -2,8 +2,10 @@
 
 Batch detections (`DetectionResult`) and streaming window detections
 (`WindowDetection`) share flags/scores/log_delta/steps; the report normalises
-them into per-layer summaries and carries the streaming incidents alongside,
-so callers read one shape regardless of the spec's mode.
+them into per-layer summaries and carries the incidents — formed by the
+streaming engine mid-run, or by the batch final sweep — plus their
+root-cause diagnoses (`repro.diagnosis`) alongside, so callers read one
+shape regardless of the spec's mode.
 """
 from __future__ import annotations
 
@@ -41,11 +43,15 @@ class MonitorReport:
     # raw per-layer detection objects (DetectionResult | WindowDetection)
     detections: Dict[Layer, Any] = dataclasses.field(default_factory=dict,
                                                      repr=False)
+    # root-cause diagnoses of the incidents above (repro.diagnosis), in the
+    # incidents' severity order
+    diagnoses: List[Any] = dataclasses.field(default_factory=list)
 
     @classmethod
     def build(cls, mode: str, detections: Dict[Layer, Any],
               incidents: List[Incident], overhead: Dict[str, Any],
-              sink_outputs: Dict[str, str]) -> "MonitorReport":
+              sink_outputs: Dict[str, str],
+              diagnoses: Any = ()) -> "MonitorReport":
         layers = {}
         for layer, det in detections.items():
             # both DetectionResult and WindowDetection carry per-event ts
@@ -61,7 +67,7 @@ class MonitorReport:
                 first_flag_ts=first_ts)
         return cls(mode=mode, layers=layers, incidents=list(incidents),
                    overhead=overhead, sink_outputs=sink_outputs,
-                   detections=dict(detections))
+                   detections=dict(detections), diagnoses=list(diagnoses))
 
     def anomalous_steps(self) -> List[int]:
         steps = sorted({s for ls in self.layers.values()
@@ -74,6 +80,7 @@ class MonitorReport:
             "layers": {k: dataclasses.asdict(v)
                        for k, v in self.layers.items()},
             "incidents": [i.to_json() for i in self.incidents],
+            "diagnoses": [d.to_json() for d in self.diagnoses],
             "anomalous_steps": self.anomalous_steps(),
             "overhead": self.overhead,
             "sink_outputs": self.sink_outputs,
@@ -99,8 +106,11 @@ class MonitorReport:
             ranked = sorted(self.incidents, key=lambda i: -i.severity)
             lines.append(f"  {len(ranked)} incident(s), ranked:")
             lines += ["  " + i.render() for i in ranked]
-        elif self.mode == "stream":
+        else:
             lines.append("  no incidents")
+        if self.diagnoses:
+            lines.append(f"  {len(self.diagnoses)} diagnosis(es):")
+            lines += ["  " + d.render() for d in self.diagnoses]
         for kind, path in self.sink_outputs.items():
             lines.append(f"  sink {kind} -> {path}")
         return "\n".join(lines)

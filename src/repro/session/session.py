@@ -36,7 +36,7 @@ from repro.session.registry import build_probes, detector_backend
 from repro.session.report import MonitorReport
 from repro.session.spec import MonitorSpec
 from repro.stream import wire
-from repro.stream.incidents import Incident
+from repro.stream.incidents import Incident, IncidentEngine
 
 
 @dataclasses.dataclass
@@ -47,10 +47,12 @@ class StepOutcome:
     incidents: List[Incident] = dataclasses.field(default_factory=list)
     actions: List[Action] = dataclasses.field(default_factory=list)
     detections: Dict[Layer, Any] = dataclasses.field(default_factory=dict)
+    # root-cause diagnoses of the incidents closed by this step
+    diagnoses: List[Any] = dataclasses.field(default_factory=list)
 
     def __bool__(self) -> bool:
         return bool(self.warmed or self.incidents or self.actions
-                    or self.detections)
+                    or self.detections or self.diagnoses)
 
 
 class NodeHandle:
@@ -82,6 +84,11 @@ class Session:
                                          self.spec.mode)(self.spec.detector)
         if self.spec.governor:
             self.governor = Governor()
+        self._diagnoser = None
+        if self.spec.diagnosis:
+            from repro.diagnosis import Diagnoser
+
+            self._diagnoser = Diagnoser()
         if self.spec.mode == "stream":
             # tee the wire transport into the sink pipeline
             if any(s.wants_wire or s.wants_events for s in self._sinks):
@@ -184,6 +191,9 @@ class Session:
             with self._detection_pause():
                 out.detections = self._backend.update()
             out.incidents = self._backend.closed[n_closed:]
+            if out.incidents and self._diagnoser is not None:
+                out.diagnoses = self._diagnoser.diagnose_all(
+                    out.incidents, self._stream_evidence())
         else:  # batch: periodic snapshot sweep (fit on the clean prefix)
             if step % det.sweep_every:
                 return out
@@ -197,6 +207,9 @@ class Session:
                 out.detections = self._backend.update(cols)
         if self.governor is not None and out.detections:
             out.actions = self.governor.decide(out.detections)
+        if self.governor is not None and out.diagnoses:
+            out.actions.extend(d.action for d in out.diagnoses)
+            out.actions.sort(key=lambda a: -a.severity)
         return out
 
     def warmup(self) -> List[Layer]:
@@ -234,6 +247,33 @@ class Session:
         return concat_columns([h.collector.snapshot_columns()
                                for h in self._nodes.values()])
 
+    # -- diagnosis ------------------------------------------------------------
+    def _stream_evidence(self):
+        """Per-layer evidence for the diagnoser: the aggregator's current
+        window views (bounded by the sliding-window horizon)."""
+        agg = self._backend.aggregator
+        return {layer: w.view() for layer, w in agg.windows.items()
+                if len(w)}
+
+    def _batch_incidents(self, cols: Dict[str, np.ndarray],
+                         detections: Dict[Layer, Any]) -> List[Incident]:
+        """Form incidents from the final batch detections — the batch-mode
+        analogue of the streaming IncidentEngine path. Calibration flags
+        inside the training prefix (the contamination quantile flags ~c% of
+        it by construction) are excluded via the engine floor."""
+        det = self.spec.detector
+        engine = IncidentEngine(gap_s=det.incident_gap_s,
+                                close_after_s=det.incident_close_after_s,
+                                min_flags=det.min_flags)
+        if cols["ts"].shape[0]:
+            last = int(cols["step"].max())
+            train = cols["step"] < last - det.holdoff_steps
+            if train.any():
+                engine.set_floor(float(cols["ts"][train].max()))
+        engine.update(detections)
+        engine.flush()
+        return engine.ranked()
+
     # -- finalisation ---------------------------------------------------------
     def _finalize(self) -> None:
         # Detach every probe BEFORE the final drain: the drained columns are
@@ -254,6 +294,11 @@ class Session:
             parts: List[Dict[str, np.ndarray]] = []
             for h in self._nodes.values():
                 node_cols = h.collector.drain_columns()
+                # per-node tracks, matching the stream path (_tap_wire):
+                # replace the OS pid with the fleet node id (new array — the
+                # drained views alias ring storage and stay untouched)
+                node_cols["pid"] = np.full(node_cols["ts"].shape[0],
+                                           h.node_id, dtype=np.int64)
                 events: Optional[List[Event]] = None
                 for s in self._sinks:
                     if s.wants_events:  # compat sinks: materialise ONCE
@@ -276,12 +321,24 @@ class Session:
                     self._backend.fit(
                         train if train["ts"].shape[0] else cols)
                 detections = self._backend.update(cols)
+            if detections:
+                incidents = self._batch_incidents(cols, detections)
+        diagnoses: List[Any] = []
+        if incidents and self._diagnoser is not None:
+            if self.spec.mode == "stream":
+                evidence = self._stream_evidence()
+            else:
+                from repro.diagnosis import evidence_from_columns
+
+                evidence = evidence_from_columns(cols)
+            diagnoses = self._diagnoser.diagnose_all(incidents, evidence)
         overhead = {h.node_id: h.collector.overhead_stats()
                     for h in self._nodes.values()}
         if self.spec.mode == "stream":
             overhead["stream"] = self._backend.monitor.stats()
         report = MonitorReport.build(self.spec.mode, detections, incidents,
-                                     overhead, sink_outputs={})
+                                     overhead, sink_outputs={},
+                                     diagnoses=diagnoses)
         for s in self._sinks:
             path = s.close(report)
             if path:

@@ -12,8 +12,9 @@ session runs, and is closed with the final `MonitorReport`:
 Builtin kinds: ``perfetto`` (trace viewer JSON), ``jsonl`` (one event per
 line), ``wire`` (length-prefixed wire batches, replayable through
 `wire.decode`), ``report`` (the unified MonitorReport as JSON, incidents
-included). Third-party sinks register with ``@register_sink("kind")`` and
-become addressable from `SinkSpec.kind`.
+included), ``incident_report`` (the operator-facing markdown incident
+report with diagnoses + a JSON sibling). Third-party sinks register with
+``@register_sink("kind")`` and become addressable from `SinkSpec.kind`.
 """
 from __future__ import annotations
 
@@ -150,6 +151,32 @@ class ReportSink(Sink):
 
     def close(self, report) -> Optional[str]:
         return report.save(self.path)
+
+
+@register_sink("incident_report")
+class IncidentReportSink(Sink):
+    """Writes the operator incident report: ranked incidents with their
+    root-cause diagnoses, causal chains, and recommended actions as markdown
+    (`repro.diagnosis.render_incident_report`), plus a machine-readable
+    ``.json`` sibling next to it."""
+
+    kind = "incident_report"
+
+    def __init__(self, path: str = "results/incident_report.md", **options):
+        super().__init__(path or "results/incident_report.md", **options)
+
+    def close(self, report) -> Optional[str]:
+        from repro.diagnosis import render_incident_report, report_json
+
+        _ensure_dir(self.path)
+        with open(self.path, "w") as f:
+            f.write(render_incident_report(report.incidents,
+                                           report.diagnoses,
+                                           mode=report.mode))
+        json_path = os.path.splitext(self.path)[0] + ".json"
+        with open(json_path, "w") as f:
+            f.write(report_json(report.incidents, report.diagnoses))
+        return self.path
 
 
 def read_wire_capture(path: str) -> List[bytes]:

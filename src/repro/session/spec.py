@@ -99,6 +99,9 @@ class MonitorSpec:
     detector: DetectorSpec = dataclasses.field(default_factory=DetectorSpec)
     sinks: List[SinkSpec] = dataclasses.field(default_factory=list)
     governor: bool = True  # decide() mitigation actions from detections
+    # root-cause diagnosis of finalised incidents (repro.diagnosis): blamed
+    # fault kind + causal chain + recommended action on the MonitorReport
+    diagnosis: bool = True
     seed: int = 0
 
     def __post_init__(self) -> None:

@@ -17,6 +17,12 @@ node in the ring. The engine turns window detections into a small number of
 
 Clusters are held open while new flags keep arriving and finalised once the
 stream has moved ``close_after_s`` past their last flag.
+
+The engine accepts batch `DetectionResult`s alongside streaming
+`WindowDetection`s (the session's batch finalise runs its final sweep
+through a fresh engine), and finalised incidents feed the root-cause
+diagnoser (`repro.diagnosis`) — ``layer_first_ts`` is recorded per incident
+so the diagnoser can order the causal chain by deficit lead/lag.
 """
 from __future__ import annotations
 
@@ -47,6 +53,10 @@ class Incident:
     layer_deficit: Dict[str, float]  # layer -> summed (delta - score)
     node_flags: Dict[int, int]  # node -> flag count
     status: str = "open"  # open | closed
+    # layer -> earliest flagged-event ts in this incident. The diagnosis
+    # engine reads this as the causal lead/lag ordering: the layer that
+    # flagged first leads the chain (see repro.diagnosis).
+    layer_first_ts: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> Dict[str, object]:
         d = dataclasses.asdict(self)
@@ -120,15 +130,24 @@ class IncidentEngine:
         rows = []
         t_max = now if now is not None else 0.0
         for layer, det in detections.items():
-            if len(det.ts):
-                t_max = max(t_max, float(det.ts.max()))
-            fresh = np.zeros(len(det.ts), dtype=bool)
+            # batch DetectionResults are accepted alongside streaming
+            # WindowDetections: ts may be absent (legacy feature paths) and
+            # nodes default to a single-node fleet
+            ts_col = getattr(det, "ts", None)
+            if ts_col is None:
+                continue
+            nodes_col = getattr(det, "nodes", None)
+            if nodes_col is None:
+                nodes_col = np.zeros(len(ts_col), dtype=np.int32)
+            if len(ts_col):
+                t_max = max(t_max, float(ts_col.max()))
+            fresh = np.zeros(len(ts_col), dtype=bool)
             li = self._layer_idx[layer]
             floor = max(self._floor, self._layer_floor.get(li, -np.inf))
-            for node in np.unique(det.nodes):
+            for node in np.unique(nodes_col):
                 key = (li, int(node))
-                on_node = det.nodes == node
-                node_ts = det.ts[on_node]
+                on_node = nodes_col == node
+                node_ts = ts_col[on_node]
                 wm = self._watermark.get(key, floor)
                 fresh[on_node] = node_ts > wm
                 self._watermark[key] = max(wm, float(node_ts.max()))
@@ -138,9 +157,9 @@ class IncidentEngine:
             deficit = np.clip(det.log_delta - det.scores[f], 0.0,
                               self.deficit_cap)
             rows.append(np.stack([
-                det.ts[f],
+                ts_col[f],
                 np.full(f.sum(), self._layer_idx[layer], dtype=np.float64),
-                det.nodes[f].astype(np.float64),
+                nodes_col[f].astype(np.float64),
                 det.steps[f].astype(np.float64),
                 deficit,
             ], axis=1))
@@ -181,9 +200,11 @@ class IncidentEngine:
         layer_ids = g[:, 1].astype(int)
         deficits = g[:, 4]
         layer_deficit: Dict[str, float] = {}
+        layer_first_ts: Dict[str, float] = {}
         for li in np.unique(layer_ids):
-            layer_deficit[self._layers[li].value] = float(
-                deficits[layer_ids == li].sum())
+            on = layer_ids == li
+            layer_deficit[self._layers[li].value] = float(deficits[on].sum())
+            layer_first_ts[self._layers[li].value] = float(g[on, 0].min())
         # suspect layer: largest deficit among cause layers; symptom layers
         # only when nothing specific flagged
         cause = {k: v for k, v in layer_deficit.items()
@@ -209,7 +230,7 @@ class IncidentEngine:
             severity=float(deficits.sum()), n_flags=int(g.shape[0]),
             steps=[int(s) for s in steps if s >= 0],
             layer_deficit=layer_deficit, node_flags=node_flags,
-            status="closed")
+            status="closed", layer_first_ts=layer_first_ts)
         self._next_id += 1
         return inc
 

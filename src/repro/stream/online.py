@@ -113,7 +113,8 @@ class OnlineGMMDetector:
     def __init__(self, n_components: int = 3, contamination: float = 0.02,
                  refit_iters: int = 4, cold_iters: int = 40,
                  drift_tol: float = 3.0, min_events: int = 64,
-                 reg: float = 1e-2, fit_rows: int = 2048, seed: int = 0):
+                 reg: float = 1e-2, fit_rows: int = 2048, seed: int = 0,
+                 delta_step: float = 2.0):
         self.n_components = n_components
         self.contamination = contamination
         self.refit_iters = refit_iters
@@ -126,6 +127,11 @@ class OnlineGMMDetector:
         # tick, and XLA recompiles per shape — fixed/bucketed shapes turn
         # per-tick recompilation (~0.5 s) into a one-time cost.
         self.fit_rows = fit_rows
+        # max nats the threshold may move per warm refit while tracking the
+        # window's contamination quantile: enough to follow slow benign
+        # drift (host timing, thermal), far too slow for a burst fault
+        # (tens-hundreds of nats below delta) to drag the threshold down
+        self.delta_step = float(delta_step)
         self.seed = seed
         # model tracking switch: False freezes every layer model after its
         # warmup fit (no warm refits, no drift-triggered cold refits)
@@ -231,7 +237,7 @@ class OnlineGMMDetector:
             flags = scores < state.log_delta
             mode = "none"
             if refit and self.track:
-                mode = self._track(layer, state, Xs, flags)
+                mode = self._track(layer, state, Xs, flags, scores)
             out[layer] = WindowDetection(
                 layer=layer, flags=flags, scores=scores,
                 log_delta=state.log_delta, steps=fs.steps, nodes=fs.nodes,
@@ -239,10 +245,13 @@ class OnlineGMMDetector:
         return out
 
     def _track(self, layer: Layer, state: _LayerState, Xs: np.ndarray,
-               flags: np.ndarray) -> str:
+               flags: np.ndarray, scores: np.ndarray) -> str:
         """Model maintenance after scoring: warm-start EM on inliers; full
         refit + threshold recalibration when the inlier likelihood collapses
-        (concept drift, not a transient anomaly burst)."""
+        (concept drift, not a transient anomaly burst). Warm refits also
+        nudge the threshold toward the window's contamination quantile
+        (clamped to ``delta_step`` nats per refit) so slow benign drift
+        cannot accumulate flags window after window."""
         inliers = Xs[~flags]
         if inliers.shape[0] < max(8 * state.n_components, 16):
             return "none"
@@ -263,6 +272,14 @@ class OnlineGMMDetector:
             n_iters=self.refit_iters, reg=self.reg, params0=state.params)
         state.params = params
         state.ll_fit = float(lls[-1])
+        # threshold tracking: move delta toward the contamination quantile
+        # of ALL scored rows (never inliers-only — censoring the tail and
+        # re-quantiling it ratchets the threshold into the bulk). The
+        # clamped step follows slow drift but is negligible against the
+        # tens-to-hundreds of nats a genuine burst sits below delta.
+        target = float(np.quantile(scores, self.contamination))
+        state.log_delta += float(np.clip(target - state.log_delta,
+                                         -self.delta_step, self.delta_step))
         state.warm_refits += 1
         return "warm"
 

@@ -11,6 +11,11 @@ Two families of checks, both run by CI and by tests/test_docs.py:
 * **registry**: docs/monitor-spec.md must mention every probe, detector
   backend, and sink kind registered in `repro.session.registry` — the spec
   reference is only a reference while it is complete.
+* **runbook**: docs/runbook.md and docs/diagnosis.md must mention every
+  chaos fault kind (`repro.core.chaos.ALL_KINDS`), and the runbook must
+  document every governor action kind (`repro.core.governor.ACTION_KINDS`)
+  and hold the playbook anchor every registered policy points at — the
+  diagnosis engine links operators straight into these pages.
 
 Exit code 0 = clean; 1 = problems (printed one per line).
 """
@@ -89,6 +94,48 @@ def registered_names() -> Tuple[List[str], List[str], List[str]]:
     return probe_names(), detector_names(), sink_kinds()
 
 
+def check_runbook() -> List[str]:
+    """Fault-kind / action-kind / policy-anchor coverage of the operator
+    docs (drift gate: a new chaos kind or governor action without a
+    playbook fails CI)."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.chaos import ALL_KINDS
+    from repro.core.governor import ACTION_KINDS, POLICIES
+
+    problems = []
+    paths = {name: os.path.join(REPO, "docs", name)
+             for name in ("runbook.md", "diagnosis.md")}
+    texts = {}
+    for name, path in paths.items():
+        rel = os.path.relpath(path, REPO)
+        if not os.path.exists(path):
+            problems.append(f"{rel}: missing (the operator docs are "
+                            "required)")
+            continue
+        texts[name] = open(path).read()
+    for name, text in texts.items():
+        rel = os.path.relpath(paths[name], REPO)
+        for kind in ALL_KINDS:
+            if f"`{kind}`" not in text:
+                problems.append(
+                    f"{rel}: chaos fault kind `{kind}` is undocumented")
+    if "runbook.md" in texts:
+        rel = os.path.relpath(paths["runbook.md"], REPO)
+        text = texts["runbook.md"]
+        slugs = heading_slugs(paths["runbook.md"])
+        for action in ACTION_KINDS:
+            if f"`{action}`" not in text:
+                problems.append(
+                    f"{rel}: governor action kind `{action}` is "
+                    "undocumented")
+        for kind, policy in sorted(POLICIES.items()):
+            if policy.runbook and policy.runbook not in slugs:
+                problems.append(
+                    f"{rel}: policy {kind!r} points at missing playbook "
+                    f"anchor #{policy.runbook}")
+    return problems
+
+
 def check_spec_reference() -> List[str]:
     path = os.path.join(REPO, "docs", "monitor-spec.md")
     rel = os.path.relpath(path, REPO)
@@ -109,7 +156,8 @@ def check_spec_reference() -> List[str]:
 
 def main() -> int:
     files = doc_files()
-    problems = check_links(files) + check_spec_reference()
+    problems = (check_links(files) + check_spec_reference()
+                + check_runbook())
     for p in problems:
         print(p)
     print(f"checked {len(files)} file(s): "
