@@ -4,9 +4,11 @@ unified `Session` API.
     PYTHONPATH=src python -m benchmarks.session_bench
     PYTHONPATH=src python -m benchmarks.session_bench --check-baseline
 
-Runs the same jitted step three ways — no session (baseline), a batch-mode
-session, and a stream-mode session — with the full `observe_step_fn` +
-`on_step` driver loop, and reports steps/sec plus relative overhead. This is
+Runs the same jitted step several ways — no session (baseline), a batch-mode
+session, a stream-mode session, and a stream session with the live operator
+surface enabled (`prometheus` exposition file + `board` HTML, rewritten at
+every flush) — with the full `observe_step_fn` + `on_step` driver loop, and
+reports steps/sec plus relative overhead. This is
 the API-level companion of table2_overhead (which measures probe overhead on
 a real train step): here the step is deliberately small so the numbers bound
 the session machinery's worst case.
@@ -23,6 +25,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import tempfile
 import time
 from typing import Dict, Optional
 
@@ -32,7 +35,7 @@ import numpy as np
 
 from benchmarks.common import RESULTS_DIR, save_result
 from repro.core.events import EventTable, Layer
-from repro.session import DetectorSpec, MonitorSpec, Session
+from repro.session import DetectorSpec, MonitorSpec, Session, SinkSpec
 
 PROBES = ["xla", "operator", "collective", "device", "step"]
 
@@ -58,6 +61,22 @@ def _spec(mode: str) -> MonitorSpec:
         probe_options={"device": {"interval": 0.05}},
         detector=DetectorSpec(min_events=48, sweep_every=100, flush_every=50,
                               holdoff_steps=25))
+
+
+def _sinks_spec(out_dir: str) -> MonitorSpec:
+    """The stream spec plus the live operator surface: a file-only
+    `prometheus` exposition sink and the HTML `board` sink, both rewritten
+    at every detection flush — the cost of self-telemetry collection +
+    atomic file publishing on top of the stream session. (Stream, not
+    batch, as the comparison base: its per-window EM has stable shapes, so
+    the delta is not swamped by the batch sweep's recompilations.)"""
+    spec = _spec("stream")
+    spec.sinks = [
+        SinkSpec(kind="prometheus",
+                 path=os.path.join(out_dir, "metrics.prom")),
+        SinkSpec(kind="board", path=os.path.join(out_dir, "board.html")),
+    ]
+    return spec
 
 
 def _run_loop(n_steps: int, session: Session, warm_steps: int = 200) -> float:
@@ -114,7 +133,8 @@ def check_baseline(fresh: Dict[str, object],
     with open(path) as f:
         base = json.load(f)
     warnings = 0
-    for key in ("probes_ms_per_step", "stream_ms_per_step"):
+    for key in ("probes_ms_per_step", "stream_ms_per_step",
+                "sinks_ms_per_step"):
         ref = base.get(key)
         got = fresh.get(key)
         if ref is None or got is None:
@@ -146,6 +166,12 @@ def run(n_steps: int = 400, save: bool = True) -> Dict[str, object]:
     probes = _run_loop(n_steps, Session(probes_spec))
     batch = _run_loop(n_steps, Session(_spec("batch")))
     stream = _run_loop(n_steps, Session(_spec("stream")))
+    # sinks delta base: a SECOND plain stream run right before the sinks
+    # run, so both sides hit the process-level jit cache the first stream
+    # session populated — the pairwise delta isolates the sinks' own cost
+    stream_warm = _run_loop(n_steps, Session(_spec("stream")))
+    with tempfile.TemporaryDirectory(prefix="session_bench_sinks_") as d:
+        sinks = _run_loop(n_steps, Session(_sinks_spec(d)))
 
     def ms_per_step(rate: float) -> float:
         return 1e3 * (1.0 / rate - 1.0 / base)
@@ -156,13 +182,21 @@ def run(n_steps: int = 400, save: bool = True) -> Dict[str, object]:
         "steps_per_s_probes_only": probes,
         "steps_per_s_batch": batch,
         "steps_per_s_stream": stream,
+        "steps_per_s_sinks": sinks,
         # added wall time per step vs unmonitored — the steady-state cost a
         # real (100ms+) train step would absorb
         "probes_ms_per_step": ms_per_step(probes),
         "batch_ms_per_step": ms_per_step(batch),
         "stream_ms_per_step": ms_per_step(stream),
+        "sinks_ms_per_step": ms_per_step(sinks),
+        "stream_warm_ms_per_step": ms_per_step(stream_warm),
+        # what the live operator surface itself costs on top of the stream
+        # session (self-telemetry collection + exposition/board rewrites)
+        "sinks_extra_ms_per_step": (ms_per_step(sinks)
+                                    - ms_per_step(stream_warm)),
         "overhead_batch_pct": 100.0 * (base / batch - 1.0),
         "overhead_stream_pct": 100.0 * (base / stream - 1.0),
+        "overhead_sinks_pct": 100.0 * (base / sinks - 1.0),
     }
     out.update(columnarise_throughput())
     if save:
@@ -185,6 +219,10 @@ def main() -> None:
           f"(+{out['batch_ms_per_step']:.2f} ms/step; periodic full refit)")
     print(f"stream session:   {out['steps_per_s_stream']:8.0f} steps/s "
           f"(+{out['stream_ms_per_step']:.2f} ms/step; windowed warm EM)")
+    print(f"stream + sinks:   {out['steps_per_s_sinks']:8.0f} steps/s "
+          f"(+{out['sinks_ms_per_step']:.2f} ms/step; "
+          f"prometheus + board add "
+          f"{out['sinks_extra_ms_per_step']:+.2f} ms/step)")
     print(f"columnarisation:  {out['columnarise_events_per_s']:,.0f} events/s "
           f"({out['columnarise_us_per_event']:.2f} us/event)")
     if args.check_baseline:

@@ -18,17 +18,28 @@ Expected output: `session.result()` contains >= 1 incident whose suspect
 layer is OPERATOR and whose suspect node is node 1 — the monitor localises
 the fault to the right layer of the right machine without ever instrumenting
 the step function.
+
+The spec also enables the live operator surface: a `prometheus` sink
+serving `/metrics` on an ephemeral port and a `board` sink writing the HTML
+status board. Before shutting down, the demo scrapes its OWN endpoint,
+lints the exposition with the strict parser, and requires >= 20 self-metric
+families; afterwards it checks the board shows the injected fault's
+incident and diagnosis. CI runs exactly this and uploads the board.
 """
 import os
 import sys
 import time
+import urllib.request
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import Layer
 from repro.core.chaos import Fault, FaultInjector
+from repro.obs.parser import parse_exposition
 from repro.session import MonitorSpec, Session
+
+MIN_METRIC_FAMILIES = 20
 
 SPEC_PATH = os.path.join(os.path.dirname(__file__), "fleet_spec.json")
 WARMUP_STEPS = 80
@@ -86,6 +97,18 @@ def main(spec_path: str = SPEC_PATH) -> int:
                     print("  " + inc.render())
         injector.clear(nodes[FAULT_NODE][0].collector)
 
+        # -- live operator surface: scrape our own /metrics endpoint -------
+        prom = session.sink("prometheus")
+        with urllib.request.urlopen(prom.url + "/metrics", timeout=10) as r:
+            exposition = r.read().decode("utf-8")
+        with urllib.request.urlopen(prom.url + "/healthz", timeout=10) as r:
+            health = r.read().decode("utf-8").strip()
+        exp = parse_exposition(exposition)  # strict lint; raises if invalid
+        n_families = len(exp.family_names())
+        print(f"[fleet] live /metrics: {n_families} self-metric families, "
+              f"{len(exp.samples)} samples (valid exposition)")
+        print(f"[fleet] /healthz: {health}")
+
     report = session.result()
     print("\n" + report.render())
     hits = [i for i in report.incidents if i.suspect_layer == FAULT_LAYER
@@ -101,6 +124,22 @@ def main(spec_path: str = SPEC_PATH) -> int:
     top = max(report.incidents, key=lambda i: i.severity)
     print(f"[fleet] OK: top incident blames {top.suspect_layer.value} on "
           f"node(s) {top.suspect_nodes}")
+    if n_families < MIN_METRIC_FAMILIES:
+        print(f"[fleet] FAIL: only {n_families} self-metric families "
+              f"(need >= {MIN_METRIC_FAMILIES})")
+        return 1
+    board_path = report.sink_outputs.get("board", "")
+    board = open(board_path).read() if board_path else ""
+    board_ok = ('id="incidents"' in board
+                and FAULT_LAYER.value in board
+                and any(d.fault_kind in board for d in report.diagnoses))
+    if not board_ok:
+        print("[fleet] FAIL: status board is missing the injected fault's "
+              "incident/diagnosis")
+        return 1
+    print(f"[fleet] OK: board at {board_path} shows the incident + "
+          f"diagnosis; exposition file at "
+          f"{report.sink_outputs.get('prometheus', '?')}")
     return 0
 
 

@@ -20,7 +20,7 @@ import numpy as np
 from repro.config import get_arch, reduced
 from repro.models.model import Runtime, init_params
 from repro.serve.engine import ServeEngine
-from repro.session import MonitorSpec, Session
+from repro.session import MonitorSpec, Session, SinkSpec
 
 # historical tuning of the serve driver (legacy-flag path only)
 LEGACY_SPEC_DEFAULTS = {
@@ -46,6 +46,12 @@ def main(argv=None) -> int:
     ap.add_argument("--stream-monitor", action="store_true",
                     help="[deprecated] = --monitor-spec "
                          "'{\"mode\":\"stream\"}'")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve monitor self-metrics on this port "
+                         "(= a \"prometheus\" sink; 0 = ephemeral)")
+    ap.add_argument("--board-out", default="",
+                    help="write a live HTML status board here "
+                         "(= a \"board\" sink)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -61,29 +67,48 @@ def main(argv=None) -> int:
                          temperature=args.temperature, seed=args.seed)
 
     spec = MonitorSpec.from_args(args, legacy_defaults=LEGACY_SPEC_DEFAULTS)
+    if spec.mode != "off":
+        if args.metrics_port >= 0:
+            spec.sinks.append(SinkSpec(
+                kind="prometheus",
+                options={"serve": True, "port": args.metrics_port}))
+        if args.board_out:
+            spec.sinks.append(SinkSpec(kind="board", path=args.board_out))
     session = Session(spec)
+    if not session.off and args.metrics_port >= 0:
+        print(f"[monitor] metrics endpoint: "
+              f"{session.sink('prometheus').url}/metrics")
 
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)
 
+    out = None
     with session.monitoring():
-        engine._step = session.observe_step_fn(engine._step)
-        if spec.mode == "stream":
-            # calibration traffic: a short clean generate fits the per-layer
-            # baselines (decode steps are homogeneous — a small constant is
-            # enough; don't scale warmup with the requested generation length)
-            engine.generate(prompts, 24)
-            fitted = session.warmup()
-            print(f"[monitor] warmed layers: {[l.value for l in fitted]}")
+        # Ctrl-C inside the monitoring context: the session still finalises
+        # and closes its sinks, so the board/metrics/report stay valid
+        try:
+            engine._step = session.observe_step_fn(engine._step)
+            if spec.mode == "stream":
+                # calibration traffic: a short clean generate fits the
+                # per-layer baselines (decode steps are homogeneous — a
+                # small constant is enough; don't scale warmup with the
+                # requested generation length)
+                engine.generate(prompts, 24)
+                fitted = session.warmup()
+                print(f"[monitor] warmed layers: "
+                      f"{[l.value for l in fitted]}")
 
-        t0 = time.time()
-        out = engine.generate(prompts, args.tokens)
-        dt = time.time() - t0
-    total_tokens = args.batch * (args.tokens + args.prompt_len - 1)
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({total_tokens / dt:.1f} tok/s decode)")
-    print("sample:", out[0, : args.prompt_len + 8].tolist())
+            t0 = time.time()
+            out = engine.generate(prompts, args.tokens)
+            dt = time.time() - t0
+        except KeyboardInterrupt:
+            print("\n[monitor] interrupted; flushing monitor artifacts")
+    if out is not None:
+        total_tokens = args.batch * (args.tokens + args.prompt_len - 1)
+        print(f"generated {out.shape} in {dt:.2f}s "
+              f"({total_tokens / dt:.1f} tok/s decode)")
+        print("sample:", out[0, : args.prompt_len + 8].tolist())
     if not session.off:
         report = session.result()
         print(report.render())

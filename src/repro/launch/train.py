@@ -28,7 +28,7 @@ from repro.data import SyntheticLMData
 from repro.launch.mesh import make_local_mesh
 from repro.models.model import Runtime
 from repro.roofline import model_flops
-from repro.session import MonitorSpec, Session
+from repro.session import MonitorSpec, Session, SinkSpec
 from repro.train.checkpoint import CheckpointManager
 from repro.train.step import (init_train_state, make_optimizer_for,
                               make_train_step)
@@ -67,6 +67,12 @@ def main(argv=None) -> int:
     ap.add_argument("--inject-faults", action="store_true")
     ap.add_argument("--trace-out", default="",
                     help="perfetto trace path (= a \"perfetto\" sink)")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve monitor self-metrics on this port "
+                         "(= a \"prometheus\" sink; 0 = ephemeral)")
+    ap.add_argument("--board-out", default="",
+                    help="write a live HTML status board here "
+                         "(= a \"board\" sink)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
@@ -107,7 +113,17 @@ def main(argv=None) -> int:
     if not args.stream_monitor:
         legacy_defaults["detector"] = {"min_events": 48}
     spec = MonitorSpec.from_args(args, legacy_defaults=legacy_defaults)
+    if spec.mode != "off":
+        if args.metrics_port >= 0:
+            spec.sinks.append(SinkSpec(
+                kind="prometheus",
+                options={"serve": True, "port": args.metrics_port}))
+        if args.board_out:
+            spec.sinks.append(SinkSpec(kind="board", path=args.board_out))
     session = Session(spec)
+    if not session.off and args.metrics_port >= 0:
+        print(f"[monitor] metrics endpoint: "
+              f"{session.sink('prometheus').url}/metrics")
     injector = None
     if args.inject_faults and not session.off:
         from repro.core import FaultInjector
@@ -136,44 +152,58 @@ def main(argv=None) -> int:
                            jax.tree.leaves(state.params)) / 2**30)
 
         # ---- training loop ----
-        for step in range(start_step, args.steps):
-            if injector is not None:
-                injector.apply(step, session.collector)
-            batch = jax.tree.map(jnp.asarray, data.batch(step))
-            state, metrics = step_fn(state, batch)
-            loss = float(metrics["loss"])
-            losses.append(loss)
-            if step % args.log_every == 0 or step == args.steps - 1:
-                print(f"step {step:5d} loss {loss:8.4f} "
-                      f"gnorm {float(metrics['grad_norm']):8.3f} "
-                      f"lr {float(metrics['lr']):.2e} "
-                      f"({(time.time()-t0):6.1f}s)")
-            if ckpt is not None and step and step % args.checkpoint_every == 0:
-                ckpt.save(step, state, meta={"loss": loss})
-            # periodic anomaly sweep: the session owns the cadence
-            out = session.on_step(step)
-            if out.warmed:
-                print(f"[monitor] warmed layers: "
-                      f"{[l.value for l in out.warmed]}")
-            for inc in out.incidents:
-                print("[monitor] " + inc.render())
-            for action in out.actions:
-                print(f"[governor] {action.kind}: {action.reason}")
-                if action.kind == "checkpoint_now" and ckpt is not None:
-                    ckpt.save(step, state, meta={"loss": loss,
-                                                 "reason": "governor"})
+        # KeyboardInterrupt is caught INSIDE the monitoring context: the
+        # session still finalises and closes its sinks, so a Ctrl-C'd run
+        # leaves a valid board/metrics/report instead of nothing
+        try:
+            for step in range(start_step, args.steps):
+                if injector is not None:
+                    injector.apply(step, session.collector)
+                batch = jax.tree.map(jnp.asarray, data.batch(step))
+                state, metrics = step_fn(state, batch)
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                if step % args.log_every == 0 or step == args.steps - 1:
+                    print(f"step {step:5d} loss {loss:8.4f} "
+                          f"gnorm {float(metrics['grad_norm']):8.3f} "
+                          f"lr {float(metrics['lr']):.2e} "
+                          f"({(time.time()-t0):6.1f}s)")
+                if ckpt is not None and step \
+                        and step % args.checkpoint_every == 0:
+                    ckpt.save(step, state, meta={"loss": loss})
+                # periodic anomaly sweep: the session owns the cadence
+                out = session.on_step(step)
+                if out.warmed:
+                    print(f"[monitor] warmed layers: "
+                          f"{[l.value for l in out.warmed]}")
+                for inc in out.incidents:
+                    print("[monitor] " + inc.render())
+                for action in out.actions:
+                    print(f"[governor] {action.kind}: {action.reason}")
+                    if action.kind == "checkpoint_now" and ckpt is not None:
+                        ckpt.save(step, state, meta={"loss": loss,
+                                                     "reason": "governor"})
+        except KeyboardInterrupt:
+            interrupted = True
+            print(f"\n[monitor] interrupted at step {step}; "
+                  "flushing monitor artifacts")
+        else:
+            interrupted = False
         if injector is not None:
             injector.clear(session.collector)
     if ckpt is not None:
-        ckpt.save(args.steps - 1, state, meta={"loss": losses[-1]})
+        if losses:
+            ckpt.save(start_step + len(losses) - 1, state,
+                      meta={"loss": losses[-1]})
         ckpt.close()
     if not session.off:
         report = session.result()
         print(report.render())
         print("[monitor] overhead stats:", report.overhead)
-    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
-          f"{args.steps - start_step} steps in {time.time()-t0:.1f}s")
-    return 0
+    if losses:
+        print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
+              f"{len(losses)} steps in {time.time()-t0:.1f}s")
+    return 130 if interrupted else 0
 
 
 if __name__ == "__main__":

@@ -25,3 +25,6 @@ from repro.session.sinks import (IncidentReportSink,  # noqa: F401
 from repro.session.report import LayerSummary, MonitorReport  # noqa: F401
 from repro.session.session import (NodeHandle, Session,  # noqa: F401
                                    StepOutcome)
+# registers the live `prometheus` and `board` sinks (imported last: they
+# subclass Sink and use the registry above)
+import repro.obs.sinks  # noqa: F401,E402

@@ -87,10 +87,34 @@ class MonitorReport:
         }
 
     def save(self, path: str) -> str:
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        with open(path, "w") as f:
-            json.dump(self.to_json(), f, indent=1)
-        return path
+        from repro.session.sinks import atomic_write
+
+        return atomic_write(path, json.dumps(self.to_json(), indent=1))
+
+    def collection_losses(self) -> Dict[str, int]:
+        """Events lost/degraded by the monitor itself, aggregated over
+        nodes: ring overwrites (``dropped``) and clipped event names
+        (``names_truncated``). Batch overhead carries them per node
+        (`overhead_stats`), stream overhead additionally under the
+        ``"stream"`` key (`StreamMonitor.stats`) — this reads both shapes
+        so the report surfaces collection loss in every mode."""
+        totals = {"dropped": 0, "names_truncated": 0}
+        for key, stats in self.overhead.items():
+            if not isinstance(stats, dict):
+                continue
+            if key == "stream":
+                # ring-level loss is already counted via the per-node
+                # entries; the stream entry contributes only the
+                # aggregator's *window-level* name clipping
+                agg = stats.get("aggregator", {})
+                if isinstance(agg, dict):
+                    totals["names_truncated"] += int(
+                        agg.get("names_truncated", 0))
+            else:
+                totals["dropped"] += int(stats.get("dropped", 0))
+                totals["names_truncated"] += int(
+                    stats.get("names_truncated", 0))
+        return totals
 
     def render(self) -> str:
         if self.mode == "off":
@@ -111,6 +135,11 @@ class MonitorReport:
         if self.diagnoses:
             lines.append(f"  {len(self.diagnoses)} diagnosis(es):")
             lines += ["  " + d.render() for d in self.diagnoses]
+        losses = self.collection_losses()
+        if any(losses.values()):
+            lines.append(
+                f"  collection loss: {losses['dropped']} ring-dropped "
+                f"event(s), {losses['names_truncated']} name(s) truncated")
         for kind, path in self.sink_outputs.items():
             lines.append(f"  sink {kind} -> {path}")
         return "\n".join(lines)

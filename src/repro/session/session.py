@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
@@ -77,6 +78,11 @@ class Session:
         self._sinks: List[sinks_mod.Sink] = []
         self._backend = None
         self.governor: Optional[Governor] = None
+        # self-telemetry layer (repro.obs.SessionObs), created on demand by
+        # the first session sink that binds (prometheus/board)
+        self.obs = None
+        self._diagnoses_seen: List[Any] = []
+        self._actions_seen: List[Action] = []
         if self.off:
             return
         self._sinks = [sinks_mod.build_sink(s) for s in self.spec.sinks]
@@ -93,6 +99,9 @@ class Session:
             # tee the wire transport into the sink pipeline
             if any(s.wants_wire or s.wants_events for s in self._sinks):
                 self._backend.monitor.wire_tap = self._tap_wire
+        for s in self._sinks:
+            if s.wants_session:
+                s.bind_session(self)
 
     # -- basic properties -----------------------------------------------------
     @property
@@ -106,6 +115,62 @@ class Session:
     @property
     def collector(self) -> Optional[Collector]:
         return None if self.off else self.node(0).collector
+
+    def obs_layer(self, **kw):
+        """Get-or-create the session's self-telemetry layer
+        (`repro.obs.SessionObs`); shared by every session sink, so the
+        exposition endpoint, the metrics file, and the status board all
+        read one registry."""
+        if self.off:
+            raise RuntimeError("mode 'off' sessions have no telemetry")
+        if self.obs is None:
+            from repro.obs.selfmetrics import SessionObs
+
+            self.obs = SessionObs(self, **kw)
+        return self.obs
+
+    def sink(self, kind: str) -> sinks_mod.Sink:
+        """The first configured sink of ``kind`` (e.g. to read the
+        prometheus sink's bound endpoint port)."""
+        for s in self._sinks:
+            if s.kind == kind:
+                return s
+        raise KeyError(f"no sink of kind {kind!r} in this session; "
+                       f"configured: {[s.kind for s in self._sinks]}")
+
+    # -- telemetry accessors (read by repro.obs) ------------------------------
+    def incidents_seen(self) -> List[Incident]:
+        """Incidents finalised so far, severity-ranked (stream: live from
+        the engine; batch: from the final report once built)."""
+        if self.spec.mode == "stream" and self._backend is not None:
+            return self._backend.monitor.engine.ranked()
+        if self._report is not None:
+            return sorted(self._report.incidents, key=lambda i: -i.severity)
+        return []
+
+    def diagnoses_seen(self) -> List[Any]:
+        """Root-cause diagnoses emitted so far (finalise replaces the
+        mid-run set: the final sweep re-diagnoses every incident)."""
+        return list(self._diagnoses_seen)
+
+    def incident_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for i in self.incidents_seen():
+            key = i.suspect_layer.value
+            out[key] = out.get(key, 0) + 1
+        return out
+
+    def diagnosis_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for d in self._diagnoses_seen:
+            out[d.fault_kind] = out.get(d.fault_kind, 0) + 1
+        return out
+
+    def action_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for a in self._actions_seen:
+            out[a.kind] = out.get(a.kind, 0) + 1
+        return out
 
     # -- fleet membership -----------------------------------------------------
     def node(self, node_id: int = 0, ts_offset: float = 0.0) -> NodeHandle:
@@ -210,6 +275,9 @@ class Session:
         if self.governor is not None and out.diagnoses:
             out.actions.extend(d.action for d in out.diagnoses)
             out.actions.sort(key=lambda a: -a.severity)
+        self._diagnoses_seen.extend(out.diagnoses)
+        self._actions_seen.extend(out.actions)
+        self._refresh_sinks()
         return out
 
     def warmup(self) -> List[Layer]:
@@ -218,7 +286,9 @@ class Session:
         if self.off or self.spec.mode != "stream":
             return []
         with self._detection_pause():
-            return self._backend.fit()
+            fitted = self._backend.fit()
+        self._refresh_sinks()
+        return fitted
 
     def tick(self) -> List[Incident]:
         """Streaming: one poll/detect/incident cycle, off-cadence."""
@@ -227,9 +297,23 @@ class Session:
         n_closed = len(self._backend.closed)
         with self._detection_pause():
             self._backend.update()
+        self._refresh_sinks()
         return self._backend.closed[n_closed:]
 
     # -- sinks ----------------------------------------------------------------
+    def _refresh_sinks(self) -> None:
+        """Let live sinks (board, exposition file) rewrite their output;
+        called at every detection cadence point. A failing sink must not
+        take down the monitored run."""
+        for s in self._sinks:
+            if s.wants_session:
+                try:
+                    s.on_flush()
+                except Exception as e:
+                    warnings.warn(
+                        f"sink {s.kind!r}: on_flush failed ({e!r})",
+                        RuntimeWarning, stacklevel=2)
+
     def _tap_wire(self, buf: bytes) -> None:
         events: Optional[List[Event]] = None
         for s in self._sinks:
@@ -285,65 +369,87 @@ class Session:
             h.collector.detach()
         incidents: List[Incident] = []
         detections: Dict[Layer, Any] = {}
-        if self.spec.mode == "stream":
-            with self._detection_pause():
-                self._backend.finish()
-            incidents = self._backend.incidents  # ranked, all closed
-            detections = self._backend.flags()
-        else:
-            parts: List[Dict[str, np.ndarray]] = []
-            for h in self._nodes.values():
-                node_cols = h.collector.drain_columns()
-                # per-node tracks, matching the stream path (_tap_wire):
-                # replace the OS pid with the fleet node id (new array — the
-                # drained views alias ring storage and stay untouched)
-                node_cols["pid"] = np.full(node_cols["ts"].shape[0],
-                                           h.node_id, dtype=np.int64)
-                events: Optional[List[Event]] = None
-                for s in self._sinks:
-                    if s.wants_events:  # compat sinks: materialise ONCE
-                        if events is None:
-                            events = wire.columns_to_events(node_cols)
-                        s.on_events(events)
-                    if s.wants_wire:
-                        s.on_wire(wire.encode_columns(
-                            node_cols, node_id=h.node_id, seq=0))
-                parts.append(node_cols)
-            cols = concat_columns(parts)
-            with self._detection_pause():
-                if cols["ts"].shape[0]:
-                    # final refit on the full clean prefix: mid-run sweeps
-                    # may have fitted before slow layers reached min_events
-                    last = int(cols["step"].max())
-                    train = select_columns(
-                        cols,
-                        cols["step"] < last - self.spec.detector.holdoff_steps)
-                    self._backend.fit(
-                        train if train["ts"].shape[0] else cols)
-                detections = self._backend.update(cols)
-            if detections:
-                incidents = self._batch_incidents(cols, detections)
         diagnoses: List[Any] = []
-        if incidents and self._diagnoser is not None:
+        try:
             if self.spec.mode == "stream":
-                evidence = self._stream_evidence()
+                with self._detection_pause():
+                    self._backend.finish()
+                incidents = self._backend.incidents  # ranked, all closed
+                detections = self._backend.flags()
             else:
-                from repro.diagnosis import evidence_from_columns
+                parts: List[Dict[str, np.ndarray]] = []
+                for h in self._nodes.values():
+                    node_cols = h.collector.drain_columns()
+                    # per-node tracks, matching the stream path (_tap_wire):
+                    # replace the OS pid with the fleet node id (new array —
+                    # the drained views alias ring storage, stay untouched)
+                    node_cols["pid"] = np.full(node_cols["ts"].shape[0],
+                                               h.node_id, dtype=np.int64)
+                    events: Optional[List[Event]] = None
+                    for s in self._sinks:
+                        if s.wants_events:  # compat sinks: materialise ONCE
+                            if events is None:
+                                events = wire.columns_to_events(node_cols)
+                            s.on_events(events)
+                        if s.wants_wire:
+                            s.on_wire(wire.encode_columns(
+                                node_cols, node_id=h.node_id, seq=0))
+                    parts.append(node_cols)
+                cols = concat_columns(parts)
+                with self._detection_pause():
+                    if cols["ts"].shape[0]:
+                        # final refit on the full clean prefix: mid-run
+                        # sweeps may have fitted before slow layers reached
+                        # min_events
+                        last = int(cols["step"].max())
+                        train = select_columns(
+                            cols, cols["step"]
+                            < last - self.spec.detector.holdoff_steps)
+                        self._backend.fit(
+                            train if train["ts"].shape[0] else cols)
+                    detections = self._backend.update(cols)
+                if detections:
+                    incidents = self._batch_incidents(cols, detections)
+            if incidents and self._diagnoser is not None:
+                if self.spec.mode == "stream":
+                    evidence = self._stream_evidence()
+                else:
+                    from repro.diagnosis import evidence_from_columns
 
-                evidence = evidence_from_columns(cols)
-            diagnoses = self._diagnoser.diagnose_all(incidents, evidence)
-        overhead = {h.node_id: h.collector.overhead_stats()
-                    for h in self._nodes.values()}
-        if self.spec.mode == "stream":
-            overhead["stream"] = self._backend.monitor.stats()
-        report = MonitorReport.build(self.spec.mode, detections, incidents,
-                                     overhead, sink_outputs={},
-                                     diagnoses=diagnoses)
-        for s in self._sinks:
-            path = s.close(report)
-            if path:
-                report.sink_outputs[s.kind] = path
-        self._report = report
+                    evidence = evidence_from_columns(cols)
+                diagnoses = self._diagnoser.diagnose_all(incidents, evidence)
+        finally:
+            # Flush-on-interrupt: even if the finalise sweep raised (or the
+            # run was Ctrl-C'd), build a report from what we have and close
+            # every sink, so the board/metrics/report artifacts are valid.
+            if self.spec.mode == "stream" and not incidents \
+                    and self._backend is not None:
+                incidents = self._backend.incidents  # whatever closed so far
+            if diagnoses:
+                # the final sweep re-diagnoses every incident; replace the
+                # mid-run accumulation instead of double counting
+                self._diagnoses_seen = list(diagnoses)
+            elif not diagnoses and self._diagnoses_seen:
+                diagnoses = list(self._diagnoses_seen)
+            overhead = {h.node_id: h.collector.overhead_stats()
+                        for h in self._nodes.values()}
+            if self.spec.mode == "stream" and self._backend is not None:
+                overhead["stream"] = self._backend.monitor.stats()
+            report = MonitorReport.build(self.spec.mode, detections,
+                                         incidents, overhead,
+                                         sink_outputs={},
+                                         diagnoses=diagnoses)
+            for s in self._sinks:
+                try:
+                    path = s.close(report)
+                except Exception as e:
+                    warnings.warn(
+                        f"sink {s.kind!r}: close failed ({e!r})",
+                        RuntimeWarning, stacklevel=2)
+                    continue
+                if path:
+                    report.sink_outputs[s.kind] = path
+            self._report = report
 
     def result(self) -> MonitorReport:
         """The unified report. Final after `monitoring()` exits; an interim

@@ -7,6 +7,10 @@ session runs, and is closed with the final `MonitorReport`:
                         stream: each node flush, already ts-rebased)
     on_wire(buf)      — wire-encoded `EventBatch` bytes (stream transport;
                         batch mode encodes the final drain per node)
+    bind_session(s)   — session sinks only (``wants_session``): attach to
+                        the running session before monitoring starts
+    on_flush()        — session sinks only: called at every detection
+                        cadence point (flush/sweep) to refresh live output
     close(report)     — flush and return the output path (or None)
 
 Builtin kinds: ``perfetto`` (trace viewer JSON), ``jsonl`` (one event per
@@ -23,7 +27,7 @@ import os
 import struct
 from typing import IO, List, Optional
 
-from repro.core.events import Event, export_perfetto
+from repro.core.events import Event, to_chrome_trace
 from repro.session.registry import register_sink, sink_class
 from repro.session.spec import SinkSpec
 
@@ -32,15 +36,26 @@ class Sink:
     kind = "sink"
     wants_events = False
     wants_wire = False
+    # session sinks observe the running Session itself (self-telemetry)
+    # rather than the event stream; they get bind_session() before
+    # monitoring starts and on_flush() at every detection cadence point
+    wants_session = False
 
     def __init__(self, path: str = "", **options):
         self.path = path
         self.options = options
+        self.session = None
 
     def on_events(self, events: List[Event]) -> None:
         pass
 
     def on_wire(self, buf: bytes) -> None:
+        pass
+
+    def bind_session(self, session) -> None:
+        self.session = session
+
+    def on_flush(self) -> None:
         pass
 
     def close(self, report) -> Optional[str]:
@@ -53,6 +68,24 @@ def build_sink(spec: SinkSpec) -> Sink:
 
 def _ensure_dir(path: str) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+
+def atomic_write(path: str, data) -> str:
+    """Write a whole file atomically: tmp sibling + `os.replace`. A reader
+    (browser tab on the board, scraper on the exposition file) never sees a
+    half-written document, and a run that dies mid-write leaves the previous
+    complete version in place."""
+    _ensure_dir(path)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    mode = "wb" if isinstance(data, (bytes, bytearray)) else "w"
+    try:
+        with open(tmp, mode) as f:
+            f.write(data)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
 
 
 @register_sink("perfetto")
@@ -80,7 +113,8 @@ class PerfettoSink(Sink):
 
     def close(self, report) -> Optional[str]:
         self._events.sort(key=lambda e: e.ts)
-        return export_perfetto(self._events, self.path)
+        return atomic_write(self.path, json.dumps(
+            to_chrome_trace(self._events)))
 
 
 @register_sink("jsonl")
@@ -168,14 +202,11 @@ class IncidentReportSink(Sink):
     def close(self, report) -> Optional[str]:
         from repro.diagnosis import render_incident_report, report_json
 
-        _ensure_dir(self.path)
-        with open(self.path, "w") as f:
-            f.write(render_incident_report(report.incidents,
-                                           report.diagnoses,
-                                           mode=report.mode))
+        atomic_write(self.path, render_incident_report(
+            report.incidents, report.diagnoses, mode=report.mode))
         json_path = os.path.splitext(self.path)[0] + ".json"
-        with open(json_path, "w") as f:
-            f.write(report_json(report.incidents, report.diagnoses))
+        atomic_write(json_path, report_json(report.incidents,
+                                            report.diagnoses))
         return self.path
 
 

@@ -11,6 +11,7 @@ buffers) without trusting the stream to be complete.
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import numpy as np
@@ -36,6 +37,7 @@ class NodeAgent:
         self.seq = 0
         self.events_shipped = 0
         self.bytes_shipped = 0
+        self.encode_seconds = 0.0  # cumulative wire-encode wall time
         self._last_dropped = 0
 
     def flush(self) -> bytes:
@@ -52,7 +54,9 @@ class NodeAgent:
             columns=cols, dropped=total_dropped - self._last_dropped)
         self._last_dropped = total_dropped
         self.seq += 1
+        t0 = time.perf_counter()
         buf = wire.encode(batch)
+        self.encode_seconds += time.perf_counter() - t0
         self.events_shipped += len(batch)
         self.bytes_shipped += len(buf)
         return buf
@@ -61,4 +65,9 @@ class NodeAgent:
         return {"node_id": self.node_id, "flushes": self.seq,
                 "events_shipped": self.events_shipped,
                 "bytes_shipped": self.bytes_shipped,
-                "dropped_total": self._last_dropped}
+                "encode_seconds": self.encode_seconds,
+                "dropped_total": self._last_dropped,
+                # ring-level accounting straight from the collector: the
+                # monitor's own loss/degradation is part of agent health
+                "ring_dropped": self.collector.buffer.dropped,
+                "names_truncated": self.collector.buffer.names_truncated}

@@ -109,6 +109,12 @@ class IncidentEngine:
         self._floor = -np.inf  # rows at or before this ts never enter
         self._layer_floor: Dict[int, float] = {}  # per-layer late-fit floors
 
+    @property
+    def n_pending_flags(self) -> int:
+        """Flag rows admitted but not yet clustered into a finalised
+        incident — the backlog an open incident is accumulating."""
+        return int(sum(a.shape[0] for a in self._pending))
+
     # -- ingestion ------------------------------------------------------------
     def set_floor(self, ts: float) -> None:
         """Exclude everything at or before ``ts`` from incident formation —

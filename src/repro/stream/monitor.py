@@ -61,6 +61,7 @@ class StreamMonitor:
         self.agents: Dict[int, NodeAgent] = {}
         self.ticks = 0
         self.detect_seconds = 0.0  # cumulative detection wall time
+        self.last_detect_ms = 0.0  # wall time of the most recent tick
         self.last_detections: Dict[Layer, WindowDetection] = {}
         # optional observer of every wire batch as it leaves an agent — the
         # session sink pipeline tees the transport through this
@@ -108,7 +109,9 @@ class StreamMonitor:
         self.last_detections = self.detector.detect(self.aggregator)
         closed = self.engine.update(self.last_detections,
                                     now=self.aggregator.t_latest)
-        self.detect_seconds += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.detect_seconds += dt
+        self.last_detect_ms = 1e3 * dt
         self.ticks += 1
         return closed
 
@@ -155,12 +158,23 @@ class StreamMonitor:
         return head + "\n" + self.engine.render_report()
 
     def stats(self) -> Dict[str, object]:
+        agents = {nid: a.stats() for nid, a in self.agents.items()}
         return {
             "aggregator": self.aggregator.stats(),
             "detector": self.detector.stats(),
-            "agents": {nid: a.stats() for nid, a in self.agents.items()},
+            "agents": agents,
             "ticks": self.ticks,
             "detect_ms_per_tick":
                 1e3 * self.detect_seconds / max(self.ticks, 1),
+            "last_detect_ms": self.last_detect_ms,
             "incidents": len(self.engine.incidents),
+            # monitor-side collection loss, aggregated across the fleet:
+            # ring overwrites at the source + names clipped at the ring or
+            # the aggregation windows (per-node detail stays under
+            # "agents"; window-level detail under "aggregator")
+            "events_dropped": sum(a["ring_dropped"]
+                                  for a in agents.values()),
+            "names_truncated": sum(a["names_truncated"]
+                                   for a in agents.values())
+            + self.aggregator.stats()["names_truncated"],
         }

@@ -134,6 +134,11 @@ class FleetAggregator:
         self.events_ingested = 0
         self.events_dropped_at_source = 0
         self.t_latest = 0.0
+        # node_id -> fleet-clock ts of the node's newest ingested event.
+        # Freshness = t_latest - node_last_ts[n]: event-time, so a node
+        # whose agent stops flushing goes stale as soon as the REST of the
+        # fleet advances the clock past it (no wall-clock dependency).
+        self.node_last_ts: Dict[int, float] = {}
 
     def ingest(self, batch: Union[bytes, wire.EventBatch]) -> int:
         """Merge one node flush; returns events added across layers."""
@@ -156,7 +161,10 @@ class FleetAggregator:
                 continue
             added += self.windows[layer].append(cols, batch.node_id, sel=sel)
         self.events_ingested += added
-        self.t_latest = max(self.t_latest, float(cols["ts"].max()))
+        t_max = float(cols["ts"].max())
+        self.t_latest = max(self.t_latest, t_max)
+        self.node_last_ts[batch.node_id] = max(
+            self.node_last_ts.get(batch.node_id, -np.inf), t_max)
         return added
 
     def evict(self, now: Optional[float] = None) -> int:

@@ -28,6 +28,11 @@ def test_spec_reference_covers_registries():
     assert not problems, "\n".join(problems)
 
 
+def test_observability_docs_cover_metric_catalogue():
+    problems = check_docs.check_observability()
+    assert not problems, "\n".join(problems)
+
+
 def test_github_slugs():
     assert check_docs.github_slug("False-alarm ceiling") == \
         "false-alarm-ceiling"

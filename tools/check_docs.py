@@ -16,6 +16,10 @@ Two families of checks, both run by CI and by tests/test_docs.py:
   document every governor action kind (`repro.core.governor.ACTION_KINDS`)
   and hold the playbook anchor every registered policy points at — the
   diagnosis engine links operators straight into these pages.
+* **observability**: docs/observability.md must document every self-metric
+  family the monitor registers (`repro.obs.METRIC_NAMES`) and both live
+  sink kinds (`prometheus`, `board`) — the metric catalogue is only a
+  catalogue while it is complete.
 
 Exit code 0 = clean; 1 = problems (printed one per line).
 """
@@ -154,10 +158,32 @@ def check_spec_reference() -> List[str]:
     return problems
 
 
+def check_observability() -> List[str]:
+    """Self-metric catalogue coverage: every registered metric family and
+    both live sink kinds must appear in docs/observability.md."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.obs import METRIC_NAMES
+
+    path = os.path.join(REPO, "docs", "observability.md")
+    rel = os.path.relpath(path, REPO)
+    if not os.path.exists(path):
+        return [f"{rel}: missing (the live-operation docs are required)"]
+    text = open(path).read()
+    problems = []
+    for name in METRIC_NAMES:
+        if f"`{name}`" not in text:
+            problems.append(f"{rel}: self-metric `{name}` is undocumented")
+    for kind in ("prometheus", "board"):
+        if f"`{kind}`" not in text:
+            problems.append(f"{rel}: live sink kind `{kind}` is "
+                            "undocumented")
+    return problems
+
+
 def main() -> int:
     files = doc_files()
     problems = (check_links(files) + check_spec_reference()
-                + check_runbook())
+                + check_runbook() + check_observability())
     for p in problems:
         print(p)
     print(f"checked {len(files)} file(s): "
