@@ -1,32 +1,57 @@
-"""Streaming monitor benchmark: wire + ingest throughput (events/s) and
-per-window detection latency.
+"""Streaming monitor benchmark: flat baseline + hierarchical node sweep.
 
-    PYTHONPATH=src python -m benchmarks.stream_bench
+    PYTHONPATH=src python -m benchmarks.stream_bench [--nodes N]
+        [--sweep 16,64,256,1024] [--steps S] [--check-baseline]
 
-Three stages, each timed separately:
+Stage 1 (flat, the historical baseline — 4 nodes, one aggregator):
 
-* ``wire``    — encode+decode round trip of node batches (the per-node agent
-                and aggregator ends of the transport)
+* ``wire``    — encode+decode round trip of node batches, v3 (compressed,
+                the default) vs v2 (plain columnar) bytes/event
 * ``ingest``  — FleetAggregator.ingest of pre-encoded batches into the
                 per-layer sliding windows (the service hot path)
 * ``detect``  — OnlineGMMDetector.detect per window tick, after warmup
-                (steady-state: compiled shapes are reused, EM is warm-started)
+
+Stage 2 (tree): the full `HierarchicalMonitor` pipeline at 16..1024
+simulated nodes — node agents (vectorised synthetic collectors) -> wire v3
+-> group aggregators -> per-group detection -> fleet incident merge.
+Ingest throughput is reported on the tree's *critical path*: groups run on
+independent hosts in a real deployment, so the wall time that matters is
+``max(per-group ingest) + fleet merge``, not the serial sum this
+single-process simulation happens to pay. Every run asserts the zero-loss
+identity ``generated == ingested + governor-shed + ring-dropped``.
+
+Stage 3 (storm): a small tree with the backpressure governor enabled and a
+budget far below the offered load — shedding must engage and the loss
+accounting must stay exact.
+
+``--check-baseline`` compares against the committed
+``results/bench/stream_bench.json`` and WARNS (never fails) when flat
+ingest throughput regresses >30% or wire bytes/event inflates >20%.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import math
+import os
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from benchmarks.common import save_result
-from repro.core.events import Event, Layer
+from repro.core.events import Event, EventTable, Layer
+from repro.fleet import HierarchicalMonitor, TopologySpec
 from repro.session import DetectorSpec, detector_backend
 from repro.stream import wire
 
+DEFAULT_SWEEP = (16, 64, 256, 1024)
+BASELINE_PATH = os.path.join("results", "bench", "stream_bench.json")
+OPS_PER_STEP = 6
+
 
 def synth_events(n_steps: int, node_seed: int, t0: float = 0.0,
-                 ops_per_step: int = 6) -> List[Event]:
+                 ops_per_step: int = OPS_PER_STEP) -> List[Event]:
     """A plausible per-node event stream: operator+step+device layers."""
     rng = np.random.default_rng(node_seed)
     base_dur = rng.uniform(2e-4, 2e-3, ops_per_step)
@@ -49,13 +74,149 @@ def synth_events(n_steps: int, node_seed: int, t0: float = 0.0,
     return evs
 
 
-def run(n_steps: int = 300, n_nodes: int = 4, repeats: int = 5
-        ) -> Dict[str, object]:
-    # ---- build per-node batches ----
+# -- tree sweep: vectorised synthetic nodes ----------------------------------
+class SynthCollector:
+    """Collector stand-in for the node agents: a bare `EventTable` fed by
+    vectorised synthetic blocks (`NodeAgent` only touches
+    ``drain_columns()`` and the buffer's loss counters)."""
+
+    def __init__(self, node_seed: int, capacity: int = 2048):
+        self.buffer = EventTable(capacity)
+        self.rng = np.random.default_rng(node_seed)
+        self.base_dur = self.rng.uniform(2e-4, 2e-3, OPS_PER_STEP)
+
+    def drain_columns(self) -> Dict[str, np.ndarray]:
+        return self.buffer.drain_columns()
+
+    def fill(self, step_lo: int, step_hi: int) -> int:
+        """Block-append [step_lo, step_hi) worth of the synthetic stream —
+        same shape as `synth_events`, no per-event Python objects."""
+        steps = np.arange(step_lo, step_hi, dtype=np.int64)
+        t = 0.02 * steps.astype(np.float64)
+        j = np.tile(np.arange(OPS_PER_STEP), steps.size)
+        op_steps = np.repeat(steps, OPS_PER_STEP)
+        n = 0
+        n += self.buffer.append_rows(
+            Layer.OPERATOR,
+            name=np.array([f"op{k}" for k in range(OPS_PER_STEP)])[j],
+            ts=np.repeat(t, OPS_PER_STEP) + 1e-4 * j,
+            dur=self.base_dur[j] * self.rng.lognormal(0, 0.1, j.size),
+            size=1e5 * (j + 1.0), step=op_steps)
+        n += self.buffer.append_rows(
+            Layer.STEP, "train_step", ts=t,
+            dur=5e-3 * self.rng.lognormal(0, 0.1, steps.size), step=steps)
+        dev = steps[steps % 2 == 0]
+        if dev.size:
+            n += self.buffer.append_rows(
+                Layer.DEVICE, "gpu0", ts=0.02 * dev.astype(np.float64),
+                step=dev, util=self.rng.uniform(0.6, 0.9, dev.size),
+                mem_gb=20.0, power_w=self.rng.uniform(250, 300, dev.size),
+                temp_c=self.rng.uniform(55, 65, dev.size))
+        return n
+
+
+def tree_group_size(n_nodes: int) -> int:
+    """Balanced two-tier tree: ~sqrt(N) nodes per group, capped at the
+    fan-in ceiling (so 1024 nodes -> 32 groups of 32)."""
+    return min(32, max(1, math.ceil(math.sqrt(n_nodes))))
+
+
+def tree_run(n_nodes: int, n_steps: Optional[int] = None,
+             group_size: Optional[int] = None,
+             flush_every: Optional[int] = None,
+             governor_budget: int = 0, capacity_per_layer: int = 8192,
+             warmup_steps: int = 40, seed: int = 0) -> Dict[str, object]:
+    """One hierarchical pipeline run at ``n_nodes`` simulated nodes.
+
+    Per-node step counts shrink as the fleet grows (constant-ish total
+    event volume), so the 1024-node point stays tractable in one process
+    while still exercising 32 groups x 32 agents. Flush cadence and the
+    eviction horizon scale with the group's event rate so the per-layer
+    windows reach a steady state WITHOUT overflow compaction — a deployed
+    group sizes its window the same way, and overflow churn would swamp
+    the ingest measurement with allocator work."""
+    if n_steps is None:
+        n_steps = max(40, min(300, 30_000 // n_nodes))
+    gs = group_size or tree_group_size(n_nodes)
+    if flush_every is None:
+        # per-flush inflow (gs nodes x ops/step) stays ~2k rows per group
+        flush_every = max(5, min(20, 2048 // (OPS_PER_STEP * gs)))
+    # horizon keeps ~half the window capacity live at steady state
+    horizon_s = 0.02 * max(2 * flush_every,
+                           capacity_per_layer // (2 * OPS_PER_STEP * gs))
+    topo = TopologySpec(group_size=gs, fan_in=32,
+                        max_events_per_flush=governor_budget)
+    mon = HierarchicalMonitor(topo, horizon_s=horizon_s,
+                              capacity_per_layer=capacity_per_layer,
+                              min_events=64, seed=seed)
+    nodes = {}
+    for nid in range(n_nodes):
+        col = SynthCollector(node_seed=seed * 100_000 + nid)
+        mon.register_node(nid, col)
+        nodes[nid] = col
+
+    for col in nodes.values():
+        col.fill(0, warmup_steps)
+    mon.warmup()
+
+    t0 = time.perf_counter()
+    for lo in range(warmup_steps, warmup_steps + n_steps, flush_every):
+        hi = min(lo + flush_every, warmup_steps + n_steps)
+        for col in nodes.values():
+            col.fill(lo, hi)
+        mon.tick()
+    wall_s = time.perf_counter() - t0
+
+    stats = mon.stats()
+    tiers = stats["tiers"]
+    agg = stats["aggregator"]
+    generated = sum(col.buffer.pushed for col in nodes.values())
+    ingested = int(agg["events_ingested"])
+    shed = int(stats["events_shed"])
+    ring_dropped = int(stats["events_dropped"])
+    # zero silent loss: every generated event is ingested, governor-shed,
+    # or ring-dropped — all three visible in counters
+    assert generated == ingested + shed + ring_dropped, (
+        f"event loss unaccounted: generated={generated} != "
+        f"ingested={ingested} + shed={shed} + dropped={ring_dropped}")
+    assert shed == int(agg["events_shed_at_source"]), (
+        "agent-side and group-side shed counters disagree")
+
+    # critical path of the deployed tree: groups aggregate on independent
+    # hosts, the fleet tier only pays the incident merge
+    critical_s = tiers["group_ingest_seconds_max"] + tiers["merge_seconds"]
+    shipped = sum(a["events_shipped"] for a in stats["agents"].values())
+    shipped_bytes = sum(a["bytes_shipped"] for a in stats["agents"].values())
+    return {
+        "n_nodes": n_nodes,
+        "n_groups": len(mon.groups),
+        "group_size": gs,
+        "fan_in": topo.fan_in,
+        "steps_per_node": n_steps,
+        "events_generated": int(generated),
+        "events_ingested": ingested,
+        "events_shed": shed,
+        "events_ring_dropped": ring_dropped,
+        "governor_budget": governor_budget,
+        "wire_bytes_per_event": shipped_bytes / max(shipped, 1),
+        "ingest_events_per_s": ingested / max(critical_s, 1e-9),
+        "critical_path_s": critical_s,
+        "group_ingest_s_max": tiers["group_ingest_seconds_max"],
+        "group_detect_s_max": tiers["group_detect_seconds_max"],
+        "merge_s": tiers["merge_seconds"],
+        "detect_ms_per_tick": stats["detect_ms_per_tick"],
+        "wall_s_simulated_serially": wall_s,
+        "ticks": stats["ticks"],
+    }
+
+
+def run(n_steps: int = 300, n_nodes: int = 4, repeats: int = 5,
+        sweep: Sequence[int] = ()) -> Dict[str, object]:
+    # ---- flat baseline: build per-node batches ----
     per_node = [synth_events(n_steps, node_seed=nid) for nid in range(n_nodes)]
     n_events = sum(len(e) for e in per_node)
 
-    # ---- wire round trip ----
+    # ---- wire round trip (v3, the default) + v2 comparison ----
     t0 = time.perf_counter()
     for _ in range(repeats):
         bufs = [wire.encode_events(evs, node_id=nid, seq=0)
@@ -64,6 +225,9 @@ def run(n_steps: int = 300, n_nodes: int = 4, repeats: int = 5
             wire.decode(b)
     wire_s = (time.perf_counter() - t0) / repeats
     wire_bytes = sum(len(b) for b in bufs)
+    v2_bytes = sum(len(wire.encode_events(
+        evs, node_id=nid, seq=0, version=wire.VERSION_PLAIN))
+        for nid, evs in enumerate(per_node))
 
     # the whole pipeline under test (windows + detector) comes from one
     # DetectorSpec resolved through the session registry — the same
@@ -104,25 +268,146 @@ def run(n_steps: int = 300, n_nodes: int = 4, repeats: int = 5
     out = {
         "n_events": n_events,
         "n_nodes": n_nodes,
+        "wire_version": wire.VERSION,
         "wire_events_per_s": n_events / wire_s,
         "wire_bytes_per_event": wire_bytes / n_events,
+        "wire_bytes_per_event_v2": v2_bytes / n_events,
+        "wire_compression_vs_v2": v2_bytes / max(wire_bytes, 1),
         "ingest_events_per_s": n_events / ingest_s,
         "detect_ms_per_window": detect_ms,
         "window_sizes": {l.value: len(w) for l, w in agg.windows.items()
                          if len(w)},
     }
+
+    # ---- flat sustained reference: the SAME pipeline + cadence as the
+    # tree points, degenerated to one group of 4 nodes — the honest
+    # denominator for the tree speedup (the burst number above amortises
+    # per-batch overhead over 2250-event batches and flatters nobody's
+    # steady state)
+    out["flat_sustained"] = tree_run(4, group_size=4, n_steps=n_steps)
+
+    # ---- hierarchical sweep + governor storm ----
+    if sweep:
+        out["sweep"] = [tree_run(n) for n in sweep]
+        # storm: offered load far above the governor budget -> shedding
+        # engages, accounting stays exact (asserted inside tree_run)
+        out["storm"] = tree_run(16, n_steps=120, governor_budget=200,
+                                flush_every=40)
     save_result("stream_bench", out)
     return out
 
 
-def main() -> None:
-    out = run()
-    print(f"events:                {out['n_events']} over {out['n_nodes']} nodes")
+def load_baseline(path: str = BASELINE_PATH) -> Optional[Dict[str, object]]:
+    """Snapshot the committed baseline BEFORE `run` overwrites the file."""
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_baseline(out: Dict[str, object],
+                   base: Optional[Dict[str, object]],
+                   path: str = BASELINE_PATH) -> int:
+    """Warn-only regression gate against the committed baseline JSON.
+    Returns the number of warnings (exit stays 0 either way)."""
+    if base is None:
+        print(f"[baseline] no committed baseline at {path}; skipping gate")
+        return 0
+    warnings = 0
+    ref_ingest = float(base.get("ingest_events_per_s", 0))
+    if ref_ingest and out["ingest_events_per_s"] < 0.7 * ref_ingest:
+        warnings += 1
+        print(f"[baseline] WARN: flat ingest {out['ingest_events_per_s']:,.0f}"
+              f" ev/s < 70% of baseline {ref_ingest:,.0f} ev/s")
+    ref_bpe = float(base.get("wire_bytes_per_event", 0))
+    if ref_bpe and out["wire_bytes_per_event"] > 1.2 * ref_bpe:
+        warnings += 1
+        print(f"[baseline] WARN: wire {out['wire_bytes_per_event']:.1f} "
+              f"B/event > 120% of baseline {ref_bpe:.1f} B/event")
+    if not warnings:
+        print(f"[baseline] OK vs committed {path}: "
+              f"ingest {out['ingest_events_per_s']:,.0f} ev/s "
+              f"(ref {ref_ingest:,.0f}), "
+              f"wire {out['wire_bytes_per_event']:.1f} B/event "
+              f"(ref {ref_bpe:.1f})")
+    return warnings
+
+
+def _print_flat(out: Dict[str, object]) -> None:
+    print(f"events:                {out['n_events']} over "
+          f"{out['n_nodes']} nodes (flat)")
     print(f"wire round trip:       {out['wire_events_per_s']:,.0f} events/s "
-          f"({out['wire_bytes_per_event']:.0f} B/event)")
+          f"(v{out['wire_version']}: {out['wire_bytes_per_event']:.1f} "
+          f"B/event, v2: {out['wire_bytes_per_event_v2']:.1f} B/event, "
+          f"{out['wire_compression_vs_v2']:.1f}x)")
     print(f"aggregator ingest:     {out['ingest_events_per_s']:,.0f} events/s")
     print(f"detection latency:     {out['detect_ms_per_window']:.1f} ms/window")
 
 
+def _print_tree(row: Dict[str, object]) -> None:
+    print(f"  {row['n_nodes']:5d} nodes  "
+          f"{row['n_groups']:3d}x{row['group_size']:<3d} tree  "
+          f"ingest {row['ingest_events_per_s']:>12,.0f} ev/s  "
+          f"{row['wire_bytes_per_event']:5.1f} B/ev  "
+          f"detect {row['detect_ms_per_tick']:7.1f} ms/tick  "
+          f"shed {row['events_shed']}")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--nodes", type=int, default=0,
+                    help="single hierarchical point at N nodes (in addition "
+                         "to the flat baseline)")
+    ap.add_argument("--steps", type=int, default=300,
+                    help="flat-baseline steps per node")
+    ap.add_argument("--sweep", default="",
+                    help="comma-separated node counts for the tree sweep "
+                         f"(default when flagless: "
+                         f"{','.join(map(str, DEFAULT_SWEEP))})")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="warn-only gate vs the committed "
+                         f"{BASELINE_PATH}")
+    args = ap.parse_args(argv)
+
+    sweep: Sequence[int]
+    if args.sweep:
+        sweep = tuple(int(x) for x in args.sweep.split(","))
+    elif args.nodes:
+        sweep = ()
+    else:
+        sweep = DEFAULT_SWEEP
+
+    base = load_baseline() if args.check_baseline else None
+    out = run(n_steps=args.steps, sweep=sweep)
+    _print_flat(out)
+    flat_ref = out["flat_sustained"]["ingest_events_per_s"]
+    print(f"flat sustained:        {flat_ref:,.0f} events/s "
+          f"(4 nodes, flush cadence matched to the tree points)")
+    if sweep:
+        print("tree sweep (critical-path ingest = max group + fleet merge):")
+        for row in out["sweep"]:
+            _print_tree(row)
+        storm = out["storm"]
+        print(f"governor storm:        budget {storm['governor_budget']} "
+              f"ev/flush -> shed {storm['events_shed']} of "
+              f"{storm['events_generated']} generated (accounted exactly)")
+    if args.nodes:
+        row = tree_run(args.nodes)
+        print("tree point:")
+        _print_tree(row)
+        ratio = row["ingest_events_per_s"] / flat_ref
+        ok_ingest = ratio >= 10.0
+        ok_bytes = row["wire_bytes_per_event"] <= 32.0
+        print(f"  vs flat sustained baseline: {ratio:.1f}x ingest "
+              f"({'OK' if ok_ingest else 'BELOW 10x'}), "
+              f"{row['wire_bytes_per_event']:.1f} B/event "
+              f"({'OK' if ok_bytes else 'ABOVE 32'})")
+        out["tree_point"] = row
+        save_result("stream_bench", out)
+    if args.check_baseline:
+        check_baseline(out, base)
+    return 0
+
+
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

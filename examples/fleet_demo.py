@@ -1,18 +1,26 @@
-"""Streaming fleet monitor demo: two simulated nodes, chaos-injected faults,
-ranked incident report — all declared by one spec JSON.
+"""Streaming fleet monitor demo: simulated nodes in a group tree,
+chaos-injected faults, ranked incident report — all declared by one spec
+JSON.
 
     PYTHONPATH=src python examples/fleet_demo.py [spec.json]
+        [--nodes N] [--group-size G]
 
 The monitoring session is described entirely by ``examples/fleet_spec.json``
-(probe suite, streaming GMM detector, incident parameters, report sink) and
-driven through the unified `Session` API. Each "node" is an independently
-monitored worker (``session.node(id)``: own Collector + probe suite) running
-the same jitted step; node 1 suffers an injected operator-latency fault (the
-pytorchfi analogue) mid-run. Node agents flush their ring buffers over the
-columnar wire format every flush interval; the fleet aggregator merges the
-batches into per-layer sliding windows; the online GMM (warm-started EM per
-window) flags anomalous events; the incident engine groups the flags across
-layers and nodes into ranked incidents.
+(probe suite, streaming GMM detector, incident parameters, report sink,
+node -> group -> fleet topology) and driven through the unified `Session`
+API. Each "node" is an independently monitored worker (``session.node(id)``:
+own Collector + probe suite) running the same jitted step; node 1 suffers an
+injected operator-latency fault (the pytorchfi analogue) mid-run. Node
+agents flush their ring buffers over the compressed columnar wire (v3)
+every flush interval; each `GroupAggregator` merges its members' batches
+into per-layer sliding windows and detects with its own warm-started GMM;
+the fleet tier merges every group's flags into ONE incident engine, so the
+fault surfaces as a single fleet-level incident with per-node attribution.
+
+Default shape: 8 nodes in groups of 4. Group size matters statistically,
+not just operationally: one faulty node is 1/G of its group's window, and
+a warm-refitted per-group GMM will absorb a fault that dominates half the
+window as a legitimate mixture component — keep G >= 4 per faulty node.
 
 Expected output: `session.result()` contains >= 1 incident whose suspect
 layer is OPERATOR and whose suspect node is node 1 — the monitor localises
@@ -22,10 +30,12 @@ the step function.
 The spec also enables the live operator surface: a `prometheus` sink
 serving `/metrics` on an ephemeral port and a `board` sink writing the HTML
 status board. Before shutting down, the demo scrapes its OWN endpoint,
-lints the exposition with the strict parser, and requires >= 20 self-metric
-families; afterwards it checks the board shows the injected fault's
-incident and diagnosis. CI runs exactly this and uploads the board.
+lints the exposition with the strict parser, requires >= 20 self-metric
+families including per-group freshness (`eacgm_fleet_group_*`); afterwards
+it checks the board shows the group tier AND the injected fault's incident
+and diagnosis. CI runs exactly this and uploads the board.
 """
+import argparse
 import os
 import sys
 import time
@@ -63,19 +73,38 @@ def make_node(session: Session, node_id: int):
     return node, fn, x0
 
 
-def main(spec_path: str = SPEC_PATH) -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("spec", nargs="?", default=SPEC_PATH,
+                    help="monitor spec JSON (default: fleet_spec.json)")
+    ap.add_argument("--nodes", type=int, default=8,
+                    help="number of simulated worker nodes")
+    ap.add_argument("--group-size", type=int, default=0,
+                    help="override the spec topology's group size "
+                         "(0 = use the spec)")
+    args = ap.parse_args(argv)
+
     t_start = time.time()
-    spec = MonitorSpec.from_file(spec_path)
+    spec = MonitorSpec.from_file(args.spec)
+    if args.group_size and spec.topology is not None:
+        spec.topology.group_size = args.group_size
     session = Session(spec)
     flush_every = spec.detector.flush_every
+    n_nodes = max(2, args.nodes)
+    topo = spec.topology
 
-    nodes = {nid: make_node(session, nid) for nid in (0, 1)}
+    nodes = {nid: make_node(session, nid) for nid in range(n_nodes)}
     # operator-latency chaos on node 1 only (pytorchfi-style software fault)
     injector = FaultInjector([Fault("op_latency", FAULT_LO, FAULT_HI, 0.02)])
 
     with session.monitoring():
-        print(f"[fleet] spec: {spec_path} (mode={spec.mode}, "
+        shape = (f"{n_nodes} nodes -> "
+                 f"{-(-n_nodes // topo.group_size)} group(s) of "
+                 f"<= {topo.group_size} -> fleet" if topo
+                 else f"{n_nodes} nodes, flat")
+        print(f"[fleet] spec: {args.spec} (mode={spec.mode}, "
               f"probes={spec.probes})")
+        print(f"[fleet] topology: {shape}")
         print(f"[fleet] warmup: {WARMUP_STEPS} clean steps on "
               f"{len(nodes)} nodes")
         xs = {nid: x0 for nid, (_, _, x0) in nodes.items()}
@@ -108,6 +137,18 @@ def main(spec_path: str = SPEC_PATH) -> int:
         print(f"[fleet] live /metrics: {n_families} self-metric families, "
               f"{len(exp.samples)} samples (valid exposition)")
         print(f"[fleet] /healthz: {health}")
+        fleet_live_ok = True
+        n_groups = 0
+        if topo is not None:
+            mon = session._backend.monitor
+            n_groups = len(mon.groups)
+            fresh = [s for s in exp.samples
+                     if s.name == "eacgm_fleet_group_freshness_seconds"]
+            fleet_live_ok = (
+                "eacgm_fleet_group_freshness_seconds" in exp.family_names()
+                and len(fresh) == n_groups)
+            print(f"[fleet] live group tier: {n_groups} group(s), "
+                  f"{len(fresh)} freshness sample(s)")
 
     report = session.result()
     print("\n" + report.render())
@@ -128,20 +169,29 @@ def main(spec_path: str = SPEC_PATH) -> int:
         print(f"[fleet] FAIL: only {n_families} self-metric families "
               f"(need >= {MIN_METRIC_FAMILIES})")
         return 1
+    if not fleet_live_ok:
+        print("[fleet] FAIL: live /metrics is missing per-group freshness "
+              "(eacgm_fleet_group_freshness_seconds)")
+        return 1
     board_path = report.sink_outputs.get("board", "")
     board = open(board_path).read() if board_path else ""
     board_ok = ('id="incidents"' in board
                 and FAULT_LAYER.value in board
                 and any(d.fault_kind in board for d in report.diagnoses))
+    if topo is not None:
+        board_ok = (board_ok and 'id="groups"' in board
+                    and all(f'data-group="{g}"' in board
+                            for g in range(n_groups)))
     if not board_ok:
         print("[fleet] FAIL: status board is missing the injected fault's "
-              "incident/diagnosis")
+              "incident/diagnosis or the group tier")
         return 1
+    tier = f" + {n_groups}-group tier" if topo is not None else ""
     print(f"[fleet] OK: board at {board_path} shows the incident + "
-          f"diagnosis; exposition file at "
+          f"diagnosis{tier}; exposition file at "
           f"{report.sink_outputs.get('prometheus', '?')}")
     return 0
 
 
 if __name__ == "__main__":
-    raise SystemExit(main(*sys.argv[1:2]))
+    raise SystemExit(main(sys.argv[1:]))

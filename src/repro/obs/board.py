@@ -34,6 +34,16 @@ class NodeCard:
 
 
 @dataclasses.dataclass
+class GroupCard:
+    group_id: int
+    state: str  # healthy | degraded | stale
+    freshness_s: float
+    n_nodes: int = 0
+    events_ingested: int = 0
+    events_shed: int = 0
+
+
+@dataclasses.dataclass
 class LayerRow:
     layer: str
     window_rows: int
@@ -81,6 +91,8 @@ class BoardModel:
     incidents: List[IncidentRow]
     diagnoses: List[DiagnosisCard]
     totals: Dict[str, object]  # label -> value footer strip
+    # group tier (hierarchical topologies only; empty = flat fleet)
+    groups: List[GroupCard] = dataclasses.field(default_factory=list)
 
     @classmethod
     def from_obs(cls, obs, history: Dict[str, Sequence[float]],
@@ -93,6 +105,7 @@ class BoardModel:
 
         session = obs.session
         nodes: List[NodeCard] = []
+        groups: List[GroupCard] = []
         agent_stats: Dict[int, dict] = {}
         totals: Dict[str, object] = {}
         backend = session._backend
@@ -106,6 +119,20 @@ class BoardModel:
             totals["detect ms/tick"] = round(
                 1e3 * mon.detect_seconds / max(mon.ticks, 1), 1)
             totals["incidents"] = len(mon.engine.incidents)
+            if hasattr(mon, "groups"):  # hierarchical topology
+                gstats = {gid: g.stats() for gid, g in mon.groups.items()}
+                for gid, state, freshness in obs.group_states():
+                    gs = gstats.get(gid, {})
+                    agg_s = gs.get("aggregator", {})
+                    groups.append(GroupCard(
+                        group_id=gid, state=state, freshness_s=freshness,
+                        n_nodes=int(gs.get("nodes", 0)),
+                        events_ingested=int(
+                            agg_s.get("events_ingested", 0)),
+                        events_shed=int(
+                            agg_s.get("events_shed_at_source", 0))))
+                totals["groups"] = len(mon.groups)
+                totals["events shed"] = agg.events_shed_at_source
         for nid, state, freshness in obs.node_states():
             st = agent_stats.get(nid, {})
             handle = session._nodes.get(nid)
@@ -141,7 +168,7 @@ class BoardModel:
                        "%Y-%m-%d %H:%M:%S"),
                    uptime_s=_time.time() - obs._t0, refresh_s=refresh_s,
                    nodes=nodes, layers=layers, incidents=incidents,
-                   diagnoses=diagnoses, totals=totals)
+                   diagnoses=diagnoses, totals=totals, groups=groups)
 
 
 def _layer_rows(session, history: Dict[str, Sequence[float]]
@@ -257,6 +284,21 @@ def render_board(model: BoardModel) -> str:
         w("</div>")
     else:
         w('<div class="empty">no nodes registered</div>')
+
+    if model.groups:  # hierarchical topologies only
+        w("<h2>Group tier</h2>")
+        w('<div class="grid" id="groups">')
+        for g in model.groups:
+            color = STATE_COLORS.get(g.state, "#8b949e")
+            w(f'<div class="card" data-group="{g.group_id}" '
+              f'data-state="{_esc(g.state)}">'
+              f'<span class="dot" style="background:{color}"></span>'
+              f'<span class="nid">group {g.group_id}</span> '
+              f'<span class="meta">{_esc(g.state)}</span><br>'
+              f'<span class="meta">freshness {g.freshness_s:.1f}s · '
+              f"{g.n_nodes} node(s) · {g.events_ingested} ev ingested · "
+              f"{g.events_shed} shed</span></div>")
+        w("</div>")
 
     w("<h2>Layers</h2>")
     if model.layers:

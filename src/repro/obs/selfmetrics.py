@@ -43,17 +43,26 @@ METRIC_NAMES = (
     "eacgm_ring_occupancy",
     "eacgm_ring_capacity",
     "eacgm_probe_events_emitted_total",
-    # per-node agent (wire transport)
+    # per-node agent (wire transport + backpressure governor)
     "eacgm_agent_flushes_total",
     "eacgm_agent_events_shipped_total",
+    "eacgm_agent_events_shed_total",
     "eacgm_agent_bytes_shipped_total",
     "eacgm_agent_encode_seconds_total",
+    "eacgm_governor_budget_events",
     # fleet aggregation + per-node freshness
     "eacgm_fleet_nodes",
     "eacgm_fleet_events_ingested_total",
     "eacgm_fleet_events_dropped_at_source_total",
+    "eacgm_fleet_events_shed_total",
     "eacgm_fleet_lost_batches_total",
     "eacgm_fleet_ingest_events_per_s",
+    # hierarchical plane: group tier (repro.fleet)
+    "eacgm_fleet_groups",
+    "eacgm_fleet_group_nodes",
+    "eacgm_fleet_group_events_ingested_total",
+    "eacgm_fleet_group_freshness_seconds",
+    "eacgm_fleet_group_state",
     "eacgm_window_occupancy",
     "eacgm_window_evicted_total",
     "eacgm_window_names_truncated_total",
@@ -133,6 +142,11 @@ class SessionObs:
             "eacgm_agent_events_shipped_total",
             "Events shipped onto the wire by the node agent",
             labels=("node",))
+        self.agent_shed = r.counter(
+            "eacgm_agent_events_shed_total",
+            "Events sampled out by the node's backpressure governor "
+            "before encoding (stratified per-layer shedding)",
+            labels=("node",))
         self.agent_bytes = r.counter(
             "eacgm_agent_bytes_shipped_total",
             "Wire bytes shipped by the node agent",
@@ -141,6 +155,10 @@ class SessionObs:
             "eacgm_agent_encode_seconds_total",
             "Cumulative wall time spent wire-encoding flushes",
             labels=("node",))
+        self.gov_budget = r.gauge(
+            "eacgm_governor_budget_events",
+            "Current AIMD admission budget (events per flush) of the "
+            "node's backpressure governor", labels=("node",))
         self.fleet_nodes = r.gauge(
             "eacgm_fleet_nodes", "Nodes the fleet aggregator has seen")
         self.fleet_ingested = r.counter(
@@ -149,12 +167,34 @@ class SessionObs:
         self.fleet_dropped_src = r.counter(
             "eacgm_fleet_events_dropped_at_source_total",
             "Events reported dropped at the source rings (per-batch counts)")
+        self.fleet_shed = r.counter(
+            "eacgm_fleet_events_shed_total",
+            "Events reported shed by agent governors (per-batch counts) — "
+            "the receiver-side mirror of eacgm_agent_events_shed_total")
         self.fleet_lost = r.counter(
             "eacgm_fleet_lost_batches_total",
             "Wire batches missing from per-node sequence numbers")
         self.fleet_rate = r.gauge(
             "eacgm_fleet_ingest_events_per_s",
             "Ingest rate since the previous collection")
+        self.fleet_groups = r.gauge(
+            "eacgm_fleet_groups",
+            "Group aggregators in the hierarchical tree (0 = flat monitor)")
+        self.group_nodes = r.gauge(
+            "eacgm_fleet_group_nodes",
+            "Nodes aggregated by the group", labels=("group",))
+        self.group_ingested = r.counter(
+            "eacgm_fleet_group_events_ingested_total",
+            "Events merged into the group's sliding windows",
+            labels=("group",))
+        self.group_freshness = r.gauge(
+            "eacgm_fleet_group_freshness_seconds",
+            "Fleet-clock seconds the group's newest event trails the fleet",
+            labels=("group",))
+        self.group_state = r.gauge(
+            "eacgm_fleet_group_state",
+            "Group freshness state: 0=healthy 1=degraded 2=stale",
+            labels=("group",))
         self.window_occupancy = r.gauge(
             "eacgm_window_occupancy",
             "Rows in the layer's sliding window", labels=("layer",))
@@ -246,16 +286,34 @@ class SessionObs:
 
     def _collect_stream(self, monitor) -> None:
         agg = monitor.aggregator
+        hierarchical = hasattr(monitor, "groups")
         for nid, agent in list(monitor.agents.items()):
             node = str(nid)
             self.agent_flushes.set_total(agent.seq, node=node)
             self.agent_events.set_total(agent.events_shipped, node=node)
+            self.agent_shed.set_total(agent.events_shed, node=node)
             self.agent_bytes.set_total(agent.bytes_shipped, node=node)
             self.agent_encode_s.set_total(agent.encode_seconds, node=node)
+            if agent.governor is not None:
+                self.gov_budget.set(agent.governor.budget, node=node)
         self.fleet_nodes.set(len(agg.nodes_seen))
         self.fleet_ingested.set_total(agg.events_ingested)
         self.fleet_dropped_src.set_total(agg.events_dropped_at_source)
+        self.fleet_shed.set_total(
+            getattr(agg, "events_shed_at_source", 0))
         self.fleet_lost.set_total(agg.lost_batches)
+        self.fleet_groups.set(
+            len(monitor.groups) if hierarchical else 0)
+        if hierarchical:
+            for gid, g in list(monitor.groups.items()):
+                group = str(gid)
+                self.group_nodes.set(len(g.agg.nodes_seen), group=group)
+                self.group_ingested.set_total(g.agg.events_ingested,
+                                              group=group)
+            for gid, state, freshness in self.group_states():
+                group = str(gid)
+                self.group_freshness.set(freshness, group=group)
+                self.group_state.set(STATE_CODE[state], group=group)
         now = time.time()
         last_events, last_t = self._last_ingest
         dt = now - last_t
@@ -271,11 +329,19 @@ class SessionObs:
         for nid, state, freshness in self.node_states():
             self.node_freshness.set(freshness, node=str(nid))
             self.node_state.set(STATE_CODE[state], node=str(nid))
-        det = monitor.detector
-        for layer, st in list(det.states.items()):
-            self.det_warm.set_total(st.warm_refits, layer=layer.value)
-            self.det_cold.set_total(st.cold_refits, layer=layer.value)
-            self.det_delta.set(st.log_delta, layer=layer.value)
+        if hierarchical:
+            # per-layer summary across group detectors: refit counts sum,
+            # thresholds average — per-group detail would multiply label
+            # cardinality by the group count for no operator benefit
+            for layer_name, st in monitor.detector_stats().items():
+                self.det_warm.set_total(st["warm_refits"], layer=layer_name)
+                self.det_cold.set_total(st["cold_refits"], layer=layer_name)
+                self.det_delta.set(st["log_delta"], layer=layer_name)
+        else:
+            for layer, st in list(monitor.detector.states.items()):
+                self.det_warm.set_total(st.warm_refits, layer=layer.value)
+                self.det_cold.set_total(st.cold_refits, layer=layer.value)
+                self.det_delta.set(st.log_delta, layer=layer.value)
         for layer, d in list(monitor.last_detections.items()):
             self.det_flag_rate.set(d.anomaly_rate, layer=layer.value)
         self.det_ticks.set_total(monitor.ticks)
@@ -311,6 +377,32 @@ class SessionObs:
             out.append((nid, state, freshness))
         return out
 
+    def group_states(self) -> List[tuple]:
+        """(group_id, state, freshness_s) per group aggregator; empty for
+        flat or non-stream sessions. Freshness is how far the group's
+        newest ingested event trails the FLEET clock — a whole group going
+        quiet (its host died, its uplink broke) flips to stale here even
+        when per-node cardinality is capped out of the node metrics."""
+        s = self.session
+        if s.spec.mode != "stream" or s._backend is None:
+            return []
+        monitor = s._backend.monitor
+        if not hasattr(monitor, "groups"):
+            return []
+        t_fleet = monitor.aggregator.t_latest
+        out = []
+        for gid, g in sorted(monitor.groups.items()):
+            freshness = (t_fleet - g.agg.t_latest if g.agg.node_last_ts
+                         else float("inf"))
+            if freshness <= self.degraded_after_s:
+                state = "healthy"
+            elif freshness <= self.stale_after_s:
+                state = "degraded"
+            else:
+                state = "stale"
+            out.append((gid, state, freshness))
+        return out
+
     # -- rendering ------------------------------------------------------------
     def scrape(self) -> str:
         """One exposition document (counts itself as a scrape)."""
@@ -343,5 +435,11 @@ class SessionObs:
         if states:
             payload["node_states"] = states
             if any(v == "stale" for v in states.values()):
+                payload["status"] = "degraded"
+        group_states = {str(gid): state
+                        for gid, state, _ in self.group_states()}
+        if group_states:
+            payload["group_states"] = group_states
+            if any(v == "stale" for v in group_states.values()):
                 payload["status"] = "degraded"
         return payload

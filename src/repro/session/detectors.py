@@ -110,18 +110,57 @@ class OnlineGMMBackend:
         self.monitor.detector.track = self.spec.warm_start
         self.closed: List[Incident] = []
 
+    def configure_topology(self, topology) -> None:
+        """Swap the flat `StreamMonitor` for a `HierarchicalMonitor` built
+        from a `TopologySpec` (the spec's ``topology`` section). Must run
+        before any node registers — the window/detector state is rebuilt."""
+        if topology is None:
+            return
+        if self.monitor.agents:
+            raise RuntimeError("configure_topology must run before nodes "
+                               "register")
+        from repro.fleet import HierarchicalMonitor
+        contamination = (STREAM_CONTAMINATION
+                         if self.spec.contamination is None
+                         else self.spec.contamination)
+        self.monitor = HierarchicalMonitor(
+            topology,
+            n_components=self.spec.n_components,
+            contamination=contamination,
+            horizon_s=self.spec.horizon_s,
+            capacity_per_layer=self.spec.capacity_per_layer,
+            min_events=self.spec.min_events,
+            incident_gap_s=self.spec.incident_gap_s,
+            incident_close_after_s=self.spec.incident_close_after_s,
+            min_flags=self.spec.min_flags,
+            seed=self.spec.seed,
+            drift_tol=self.spec.drift_tol,
+            track=self.spec.warm_start)
+
+    @property
+    def hierarchical(self) -> bool:
+        return hasattr(self.monitor, "groups")
+
     @property
     def fitted(self) -> bool:
-        return self.monitor.detector.warmed
+        return (self.monitor.warmed if self.hierarchical
+                else self.monitor.detector.warmed)
 
     @property
     def aggregator(self):
-        """The fleet's per-layer sliding windows (FleetAggregator)."""
+        """The fleet's per-layer sliding windows (`FleetAggregator`, or the
+        `FleetView` facade under a hierarchical topology)."""
         return self.monitor.aggregator
 
     @property
     def window_detector(self):
-        """The raw per-window detector (OnlineGMMDetector)."""
+        """The raw per-window detector (OnlineGMMDetector); under a
+        hierarchical topology there is one per group — see
+        ``monitor.group_detectors``."""
+        if self.hierarchical:
+            raise AttributeError(
+                "hierarchical monitor has per-group detectors; use "
+                "monitor.group_detectors")
         return self.monitor.detector
 
     def register_node(self, node_id: int, collector: Collector,

@@ -93,23 +93,26 @@ class MonitorReport:
 
     def collection_losses(self) -> Dict[str, int]:
         """Events lost/degraded by the monitor itself, aggregated over
-        nodes: ring overwrites (``dropped``) and clipped event names
-        (``names_truncated``). Batch overhead carries them per node
-        (`overhead_stats`), stream overhead additionally under the
-        ``"stream"`` key (`StreamMonitor.stats`) — this reads both shapes
-        so the report surfaces collection loss in every mode."""
-        totals = {"dropped": 0, "names_truncated": 0}
+        nodes: ring overwrites (``dropped``), backpressure-governor
+        sampling (``shed``), and clipped event names (``names_truncated``).
+        Batch overhead carries them per node (`overhead_stats`), stream
+        overhead additionally under the ``"stream"`` key
+        (`StreamMonitor.stats` / `HierarchicalMonitor.stats`) — this reads
+        both shapes so the report surfaces collection loss in every mode."""
+        totals = {"dropped": 0, "shed": 0, "names_truncated": 0}
         for key, stats in self.overhead.items():
             if not isinstance(stats, dict):
                 continue
             if key == "stream":
                 # ring-level loss is already counted via the per-node
-                # entries; the stream entry contributes only the
-                # aggregator's *window-level* name clipping
+                # entries; the stream entry contributes the aggregator's
+                # *window-level* name clipping plus the agents' governor
+                # shedding (a stream-only mechanism)
                 agg = stats.get("aggregator", {})
                 if isinstance(agg, dict):
                     totals["names_truncated"] += int(
                         agg.get("names_truncated", 0))
+                totals["shed"] += int(stats.get("events_shed", 0))
             else:
                 totals["dropped"] += int(stats.get("dropped", 0))
                 totals["names_truncated"] += int(
@@ -139,7 +142,8 @@ class MonitorReport:
         if any(losses.values()):
             lines.append(
                 f"  collection loss: {losses['dropped']} ring-dropped "
-                f"event(s), {losses['names_truncated']} name(s) truncated")
+                f"event(s), {losses['shed']} governor-shed event(s), "
+                f"{losses['names_truncated']} name(s) truncated")
         for kind, path in self.sink_outputs.items():
             lines.append(f"  sink {kind} -> {path}")
         return "\n".join(lines)

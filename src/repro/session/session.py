@@ -88,6 +88,16 @@ class Session:
         self._sinks = [sinks_mod.build_sink(s) for s in self.spec.sinks]
         self._backend = detector_backend(self.spec.detector.backend,
                                          self.spec.mode)(self.spec.detector)
+        if self.spec.topology is not None:
+            # node -> group -> fleet tree (repro.fleet); must precede node
+            # registration AND the wire-tap below, which replaces the monitor
+            if hasattr(self._backend, "configure_topology"):
+                self._backend.configure_topology(self.spec.topology)
+            else:
+                warnings.warn(
+                    f"detector backend {self.spec.detector.backend!r} has "
+                    "no topology support; the topology section is ignored",
+                    UserWarning, stacklevel=2)
         if self.spec.governor:
             self.governor = Governor()
         self._diagnoser = None

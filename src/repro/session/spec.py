@@ -24,6 +24,8 @@ import os
 import warnings
 from typing import Any, Dict, List, Mapping, Optional
 
+from repro.fleet.topology import TopologySpec
+
 SPEC_ENV_VAR = "REPRO_MONITOR_SPEC"
 MODES = ("off", "batch", "stream")
 # default probe suite = Collector.standard()'s hard-coded list, now by name
@@ -102,6 +104,9 @@ class MonitorSpec:
     # root-cause diagnosis of finalised incidents (repro.diagnosis): blamed
     # fault kind + causal chain + recommended action on the MonitorReport
     diagnosis: bool = True
+    # stream mode only: node -> group -> fleet aggregation tree + the
+    # agent-side backpressure governor (repro.fleet). None = flat monitor.
+    topology: Optional[TopologySpec] = None
     seed: int = 0
 
     def __post_init__(self) -> None:
@@ -109,6 +114,13 @@ class MonitorSpec:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
         if isinstance(self.detector, Mapping):
             self.detector = DetectorSpec.from_dict(self.detector)
+        if isinstance(self.topology, Mapping):
+            _check_fields(TopologySpec, self.topology)
+            self.topology = TopologySpec(**self.topology)
+        if self.topology is not None and self.mode not in ("stream", "off"):
+            raise ValueError(
+                "topology is a stream-mode concept; remove the topology "
+                f"section or set mode='stream' (got mode={self.mode!r})")
         self.sinks = [SinkSpec.from_dict(s) if isinstance(s, Mapping) else s
                       for s in self.sinks]
 

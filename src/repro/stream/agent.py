@@ -8,6 +8,12 @@ fleet epoch, and returns a wire-encoded `EventBatch` — columns in, columns
 out, zero `Event` objects. Dropped-event counts are carried per batch so the
 aggregator can account for ring overruns (paper: bounded-memory perf
 buffers) without trusting the stream to be complete.
+
+At fleet scale the agent optionally runs a `BackpressureGovernor`
+(`repro.fleet.governor`) on the agent→group path: when the group tier signals
+pressure, the governor sheds load by stratified per-layer sampling BEFORE
+encoding — never starving a layer, and stamping the shed count into the
+batch header so the loss is accounted fleet-wide, not silent.
 """
 from __future__ import annotations
 
@@ -27,15 +33,24 @@ class NodeAgent:
     collector's t0) onto a shared fleet clock; in a real deployment this is
     the node's NTP-disciplined epoch offset, in simulation it aligns the
     per-node monotonic clocks.
+
+    ``governor`` (optional) is a `repro.fleet.governor.BackpressureGovernor`
+    applied to every flush; ``wire_version`` selects the wire encoding
+    (defaults to `wire.VERSION`, the compressed v3 format).
     """
 
     def __init__(self, node_id: int, collector: Collector,
-                 ts_offset: float = 0.0):
+                 ts_offset: float = 0.0, governor=None,
+                 wire_version: Optional[int] = None):
         self.node_id = node_id
         self.collector = collector
         self.ts_offset = ts_offset
+        self.governor = governor
+        self.wire_version = (wire.VERSION if wire_version is None
+                             else int(wire_version))
         self.seq = 0
         self.events_shipped = 0
+        self.events_shed = 0  # sampled out by the governor, pre-encode
         self.bytes_shipped = 0
         self.encode_seconds = 0.0  # cumulative wire-encode wall time
         self._last_dropped = 0
@@ -48,14 +63,20 @@ class NodeAgent:
         cols = self.collector.drain_columns()
         if self.ts_offset and cols["ts"].shape[0]:
             cols["ts"] = cols["ts"] + self.ts_offset
+        shed = 0
+        if self.governor is not None and cols["ts"].shape[0]:
+            cols, shed_by_layer = self.governor.admit(cols)
+            shed = int(sum(shed_by_layer.values()))
+            self.events_shed += shed
         total_dropped = self.collector.buffer.dropped
         batch = wire.EventBatch(
             node_id=self.node_id, seq=self.seq, t_base=self.ts_offset,
-            columns=cols, dropped=total_dropped - self._last_dropped)
+            columns=cols, dropped=total_dropped - self._last_dropped,
+            shed=shed)
         self._last_dropped = total_dropped
         self.seq += 1
         t0 = time.perf_counter()
-        buf = wire.encode(batch)
+        buf = wire.encode(batch, version=self.wire_version)
         self.encode_seconds += time.perf_counter() - t0
         self.events_shipped += len(batch)
         self.bytes_shipped += len(buf)
@@ -64,9 +85,13 @@ class NodeAgent:
     def stats(self) -> dict:
         return {"node_id": self.node_id, "flushes": self.seq,
                 "events_shipped": self.events_shipped,
+                "events_shed": self.events_shed,
                 "bytes_shipped": self.bytes_shipped,
                 "encode_seconds": self.encode_seconds,
                 "dropped_total": self._last_dropped,
+                "wire_version": self.wire_version,
+                "governor_budget": (self.governor.budget
+                                    if self.governor is not None else None),
                 # ring-level accounting straight from the collector: the
                 # monitor's own loss/degradation is part of agent health
                 "ring_dropped": self.collector.buffer.dropped,

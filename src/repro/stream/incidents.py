@@ -129,10 +129,33 @@ class IncidentEngine:
         into an incident)."""
         self._layer_floor[self._layer_idx[layer]] = float(ts)
 
+    def set_node_floor(self, layer: Layer, node: int, ts: float) -> None:
+        """Same exclusion, for one (layer, node) pair — used by the
+        hierarchical plane when one GROUP warms a layer late: only that
+        group's member nodes should have their calibration flags excluded,
+        not the whole fleet's."""
+        key = (self._layer_idx[layer], int(node))
+        self._watermark[key] = max(
+            self._watermark.get(key, -np.inf), float(ts))
+
     def update(self, detections: Dict[Layer, WindowDetection],
                now: Optional[float] = None) -> List[Incident]:
         """Feed one tick's detections; returns incidents finalised by this
         update (clusters whose last flag is > close_after_s old)."""
+        return self._finalise(self.ingest(detections, now))
+
+    def finalise(self, now: float) -> List[Incident]:
+        """Close clusters whose last flag is > close_after_s before ``now``
+        (public wrapper; pair with `ingest`)."""
+        return self._finalise(float(now))
+
+    def ingest(self, detections: Dict[Layer, WindowDetection],
+               now: Optional[float] = None) -> float:
+        """Admit one tick's detections into the pending flag stream WITHOUT
+        finalising. The hierarchical plane admits every group's detections
+        first and then calls `finalise` once, so a cross-group flag cluster
+        can never be split by group feed order. Returns the newest timestamp
+        observed (input ``now`` folded in)."""
         rows = []
         t_max = now if now is not None else 0.0
         for layer, det in detections.items():
@@ -171,7 +194,7 @@ class IncidentEngine:
             ], axis=1))
         if rows:
             self._pending.append(np.concatenate(rows, axis=0))
-        return self._finalise(t_max)
+        return t_max
 
     def flush(self) -> List[Incident]:
         """Force-finalise everything pending (end of run)."""

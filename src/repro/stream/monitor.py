@@ -44,6 +44,28 @@ from repro.stream.online import OnlineGMMDetector, WindowDetection
 from repro.stream.window import FleetAggregator
 
 
+def export_windows_trace(windows, path: str) -> str:
+    """Perfetto export of the events currently held in per-layer sliding
+    windows (flat monitor or merged fleet view — anything with `view()`).
+
+    Bounded by the window horizon — a streaming monitor does not keep the
+    whole run. Node ids are exported as pids so per-node tracks separate in
+    the viewer."""
+    events: List[Event] = []
+    for layer, w in windows.items():
+        v = w.view()
+        for i in range(len(w)):
+            meta = None
+            if layer == Layer.DEVICE and not np.isnan(v["util"][i]):
+                meta = {k: float(v[k][i]) for k in wire.TELEMETRY_KEYS}
+            events.append(Event(
+                layer=layer, name=str(v["name"][i]), ts=float(v["ts"][i]),
+                dur=float(v["dur"][i]), size=float(v["size"][i]),
+                step=int(v["step"][i]), pid=int(v["node"][i]), meta=meta))
+    events.sort(key=lambda e: e.ts)
+    return export_perfetto(events, path)
+
+
 class StreamMonitor:
     def __init__(self, n_components: int = 3, contamination: float = 0.02,
                  horizon_s: float = 60.0, capacity_per_layer: int = 65536,
@@ -126,22 +148,8 @@ class StreamMonitor:
 
         The agents drain the collectors' ring buffers, so the collector-side
         `export_trace` would be empty under streaming; this reconstructs the
-        trace from the aggregated columns instead (bounded by the window
-        horizon — a streaming monitor does not keep the whole run). Node ids
-        are exported as pids so per-node tracks separate in the viewer."""
-        events: List[Event] = []
-        for layer, w in self.aggregator.windows.items():
-            v = w.view()
-            for i in range(len(w)):
-                meta = None
-                if layer == Layer.DEVICE and not np.isnan(v["util"][i]):
-                    meta = {k: float(v[k][i]) for k in wire.TELEMETRY_KEYS}
-                events.append(Event(
-                    layer=layer, name=str(v["name"][i]), ts=float(v["ts"][i]),
-                    dur=float(v["dur"][i]), size=float(v["size"][i]),
-                    step=int(v["step"][i]), pid=int(v["node"][i]), meta=meta))
-        events.sort(key=lambda e: e.ts)
-        return export_perfetto(events, path)
+        trace from the aggregated columns instead."""
+        return export_windows_trace(self.aggregator.windows, path)
 
     # -- reporting ------------------------------------------------------------
     @property
@@ -174,6 +182,7 @@ class StreamMonitor:
             # "agents"; window-level detail under "aggregator")
             "events_dropped": sum(a["ring_dropped"]
                                   for a in agents.values()),
+            "events_shed": sum(a["events_shed"] for a in agents.values()),
             "names_truncated": sum(a["names_truncated"]
                                    for a in agents.values())
             + self.aggregator.stats()["names_truncated"],

@@ -122,6 +122,7 @@ class FleetAggregator:
     """Merges wire batches from N nodes into per-layer sliding windows."""
 
     LAYERS = tuple(Layer)
+    MISSING_SEQ_CAP = 512  # outstanding seq gaps remembered per node
 
     def __init__(self, capacity_per_layer: int = 65536,
                  horizon_s: float = 60.0):
@@ -129,10 +130,14 @@ class FleetAggregator:
         self.windows: Dict[Layer, LayerWindow] = {
             layer: LayerWindow(layer, capacity_per_layer, horizon_s)
             for layer in self.LAYERS}
-        self.nodes_seen: Dict[int, int] = {}  # node_id -> last seq
+        self.nodes_seen: Dict[int, int] = {}  # node_id -> newest seq seen
+        # seq gaps counted into lost_batches that a late delivery may still
+        # fill (bounded per node; overflow stays counted as lost)
+        self._missing_seqs: Dict[int, set] = {}
         self.lost_batches = 0
         self.events_ingested = 0
         self.events_dropped_at_source = 0
+        self.events_shed_at_source = 0
         self.t_latest = 0.0
         # node_id -> fleet-clock ts of the node's newest ingested event.
         # Freshness = t_latest - node_last_ts[n]: event-time, so a node
@@ -144,11 +149,29 @@ class FleetAggregator:
         """Merge one node flush; returns events added across layers."""
         if isinstance(batch, (bytes, bytearray, memoryview)):
             batch = wire.decode(bytes(batch))
-        last = self.nodes_seen.get(batch.node_id)
-        if last is not None and batch.seq > last + 1:
+        nid = batch.node_id
+        last = self.nodes_seen.get(nid)
+        if last is None or batch.seq == last + 1:
+            self.nodes_seen[nid] = batch.seq
+        elif batch.seq > last + 1:
+            # gap: count it lost, but remember WHICH seqs are outstanding so
+            # an out-of-order late delivery uncounts itself instead of
+            # flipping a healthy node's accounting
+            missing = self._missing_seqs.setdefault(nid, set())
+            missing.update(range(last + 1, batch.seq))
             self.lost_batches += batch.seq - last - 1
-        self.nodes_seen[batch.node_id] = batch.seq
+            while len(missing) > self.MISSING_SEQ_CAP:
+                missing.discard(min(missing))  # oldest gaps stay counted
+            self.nodes_seen[nid] = batch.seq
+        else:
+            # late or duplicate arrival: seq <= newest seen. A late batch
+            # that fills a counted gap is a delivery, not a loss.
+            missing = self._missing_seqs.get(nid)
+            if missing and batch.seq in missing:
+                missing.discard(batch.seq)
+                self.lost_batches -= 1
         self.events_dropped_at_source += batch.dropped
+        self.events_shed_at_source += batch.shed
         cols = batch.columns
         n = int(cols["ts"].shape[0])
         if n == 0:
@@ -180,6 +203,7 @@ class FleetAggregator:
             "nodes": len(self.nodes_seen),
             "events_ingested": self.events_ingested,
             "events_dropped_at_source": self.events_dropped_at_source,
+            "events_shed_at_source": self.events_shed_at_source,
             "lost_batches": self.lost_batches,
             # names clipped to the fixed column width on ingest — nonzero
             # means kernel names in traces/reports are prefixes

@@ -376,14 +376,15 @@ def test_aggregator_surfaces_wire_truncations():
 def test_wire_version_mismatch_raises_named_error():
     buf = wire.encode_events(_fixture_events(2), node_id=0, seq=0)
     assert wire.decode(buf) is not None  # sanity: intact round trip
-    for bad_version in (0, wire.VERSION + 1, 999):
+    assert wire.VERSION in wire.SUPPORTED_VERSIONS
+    for bad_version in (0, max(wire.SUPPORTED_VERSIONS) + 1, 999):
         corrupted = (buf[:4] + struct.pack("<H", bad_version) + buf[6:])
         with pytest.raises(wire.WireVersionError) as exc:
             wire.decode(corrupted)
         assert str(bad_version) in str(exc.value)
         assert str(wire.VERSION) in str(exc.value)
         assert exc.value.got == bad_version
-        assert exc.value.supported == wire.VERSION
+        assert tuple(exc.value.supported) == wire.SUPPORTED_VERSIONS
     # WireVersionError subclasses ValueError: existing catch-alls still work
     assert issubclass(wire.WireVersionError, ValueError)
 
@@ -398,6 +399,7 @@ def test_wire_columnar_encode_round_trip():
     back = columns_to_events(batch.columns)
     assert len(back) == len(evs)
     for a, b in zip(evs, back):
-        assert (a.layer, a.name, a.ts, a.step) == (b.layer, b.name, b.ts,
-                                                   b.step)
+        assert (a.layer, a.name, a.step) == (b.layer, b.name, b.step)
+        # v3 quantises timestamps to integer nanoseconds on the wire
+        assert b.ts == pytest.approx(a.ts, abs=1e-9)
         assert a.meta == b.meta

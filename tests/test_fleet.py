@@ -1,0 +1,391 @@
+"""Hierarchical fleet plane: wire version matrix, backpressure governor,
+topology validation, cross-group incident merge, out-of-order freshness,
+and the spec-driven session integration."""
+import numpy as np
+import pytest
+
+from repro.core.events import Event, EventTable, Layer
+from repro.fleet import (BackpressureGovernor, FleetTopology,
+                         HierarchicalMonitor, TopologySpec)
+from repro.stream import wire
+from repro.stream.window import FleetAggregator
+
+
+# ---------------------------------------------------------------------------
+# wire versions (satellite: compat matrix + named errors)
+# ---------------------------------------------------------------------------
+
+def _fixture_events(n=24):
+    evs = [Event(layer=Layer.OPERATOR, name=f"op{i % 3}", ts=0.01 * i,
+                 dur=1e-4 * (1 + i % 5), size=100.0 * i, step=i // 4,
+                 pid=7, tid=2 ** 40 + i) for i in range(n)]
+    evs.append(Event(layer=Layer.DEVICE, name="gpu0", ts=0.5, step=5,
+                     meta={"util": 0.75, "mem_gb": 11.5}))
+    return evs
+
+
+def test_wire_version_constants_single_source():
+    assert wire.SUPPORTED_VERSIONS == (wire.VERSION_LEGACY,
+                                       wire.VERSION_PLAIN,
+                                       wire.VERSION_COMPRESSED)
+    assert wire.VERSION == wire.VERSION_COMPRESSED
+    assert wire.VERSION_LEGACY < wire.VERSION_PLAIN < wire.VERSION_COMPRESSED
+
+
+@pytest.mark.parametrize("version", wire.SUPPORTED_VERSIONS)
+def test_wire_round_trip_matrix(version):
+    """Every supported version decodes through the one reader, with full
+    header provenance (incl. the shed count) and event fidelity; v3 may
+    quantise timestamps to integer nanoseconds."""
+    evs = _fixture_events()
+    buf = wire.encode_events(evs, node_id=9, seq=4, t_base=2.5, dropped=3,
+                             shed=11, version=version)
+    batch = wire.decode(buf)
+    assert (batch.node_id, batch.seq, batch.dropped, batch.shed) == (
+        9, 4, 3, 11)
+    assert batch.t_base == 2.5
+    back = wire.columns_to_events(batch.columns)
+    assert len(back) == len(evs)
+    for a, b in zip(evs, back):
+        assert (a.layer, a.name, a.step, a.pid, a.tid) == (
+            b.layer, b.name, b.step, b.pid, b.tid)
+        assert b.ts == pytest.approx(a.ts, abs=1e-9)
+        assert b.dur == a.dur and b.size == a.size
+    assert back[-1].meta == evs[-1].meta
+
+
+def test_wire_v2_writer_still_readable_and_v3_smaller():
+    """Backward compat: an old plain-columnar writer interoperates with the
+    current reader, and the compressed default actually compresses."""
+    evs = _fixture_events(200)
+    v2 = wire.encode_events(evs, node_id=0, seq=0,
+                            version=wire.VERSION_PLAIN)
+    v3 = wire.encode_events(evs, node_id=0, seq=0)
+    assert wire.decode(v2).node_id == wire.decode(v3).node_id == 0
+    assert len(v3) < len(v2) / 2
+
+
+def test_wire_unknown_version_raises_named_error():
+    buf = wire.encode_events(_fixture_events(2), node_id=0, seq=0)
+    import struct
+    bad = buf[:4] + struct.pack("<H", 42) + buf[6:]
+    with pytest.raises(wire.WireVersionError) as exc:
+        wire.decode(bad)
+    assert exc.value.got == 42
+    assert tuple(exc.value.supported) == wire.SUPPORTED_VERSIONS
+    assert issubclass(wire.WireVersionError, ValueError)
+
+
+@pytest.mark.parametrize("version", wire.SUPPORTED_VERSIONS)
+def test_wire_truncated_body_raises_value_error(version):
+    """A short read must fail loudly in every version — never a silently
+    truncated batch."""
+    buf = wire.encode_events(_fixture_events(), node_id=0, seq=0,
+                             version=version)
+    with pytest.raises(ValueError):
+        wire.decode(buf[:-5])
+
+
+# ---------------------------------------------------------------------------
+# backpressure governor (tentpole: AIMD + stratified shedding)
+# ---------------------------------------------------------------------------
+
+_CODE = {layer: code for code, layer in enumerate(Layer)}
+
+
+def _cols(op=0, dev=0):
+    """Columns with `op` operator events then `dev` device events."""
+    n = op + dev
+    layer = np.concatenate([
+        np.full(op, _CODE[Layer.OPERATOR], np.int8),
+        np.full(dev, _CODE[Layer.DEVICE], np.int8)])
+    return {"layer": layer,
+            "name": np.array(["x"] * n),
+            "ts": np.arange(n, dtype=np.float64) * 1e-3,
+            "dur": np.ones(n), "size": np.zeros(n),
+            "pid": np.zeros(n, np.int64), "tid": np.zeros(n, np.int64),
+            "step": np.arange(n, dtype=np.int64),
+            "util": np.full(n, np.nan), "mem_gb": np.full(n, np.nan),
+            "power_w": np.full(n, np.nan), "temp_c": np.full(n, np.nan),
+            "meta": np.array([""] * n, object)}
+
+
+def test_governor_respects_budget_and_layer_floor():
+    gov = BackpressureGovernor(100, min_per_layer=8)
+    kept, shed = gov.admit(_cols(op=900, dev=10))
+    n_kept = int(kept["ts"].shape[0])
+    assert n_kept <= 100
+    assert n_kept + sum(shed.values()) == 910
+    # stratification: the tiny device layer is never starved
+    dev_kept = int((kept["layer"] == np.int8(_CODE[Layer.DEVICE])).sum())
+    assert dev_kept >= 8
+    assert gov.events_admitted == n_kept and gov.events_shed == 910 - n_kept
+    assert sum(gov.shed_by_layer.values()) == gov.events_shed
+
+
+def test_governor_thinning_spans_the_flush_window():
+    """Even-stride sampling: the surviving events cover the whole flush,
+    not just its head."""
+    gov = BackpressureGovernor(50, min_per_layer=1)
+    kept, _ = gov.admit(_cols(op=1000))
+    ts = kept["ts"]
+    assert ts.min() < 0.1e-3 * 1000 and ts.max() > 0.9e-3 * 1000
+
+
+def test_governor_aimd_cycle():
+    gov = BackpressureGovernor(1000, min_per_layer=16, high_water=0.85,
+                               decrease=0.5, recover_fraction=0.05)
+    gov.feedback(0.95)
+    assert gov.budget == 500
+    for _ in range(20):  # sustained pressure cannot starve the agent
+        gov.feedback(0.99)
+    assert gov.budget >= 16
+    for _ in range(1000):  # calm: additive recovery back to the ceiling
+        gov.feedback(0.1)
+    assert gov.budget == 1000
+
+
+def test_governor_under_budget_is_identity():
+    gov = BackpressureGovernor(100)
+    cols = _cols(op=40)
+    kept, shed = gov.admit(cols)
+    assert kept is cols and shed == {}
+    assert gov.events_shed == 0
+
+
+# ---------------------------------------------------------------------------
+# topology validation + routing
+# ---------------------------------------------------------------------------
+
+def test_topology_spec_validation():
+    with pytest.raises(ValueError):
+        TopologySpec(group_size=64, fan_in=32)  # group is one hop
+    with pytest.raises(ValueError):
+        TopologySpec(group_size=0)
+    with pytest.raises(ValueError):
+        TopologySpec(high_water=0.0)
+    with pytest.raises(ValueError):
+        TopologySpec(decrease=1.0)
+    with pytest.raises(ValueError):
+        TopologySpec(max_events_per_flush=-1)
+    spec = TopologySpec(group_size=4, fan_in=8)
+    assert TopologySpec.parse(spec) is spec
+    assert TopologySpec.parse(None) is None
+    assert TopologySpec.parse(spec.to_dict()) == spec
+
+
+def test_topology_routing_and_fan_in_cap():
+    topo = FleetTopology(TopologySpec(group_size=4, fan_in=8))
+    assert [topo.group_of(n) for n in (0, 3, 4, 31)] == [0, 0, 1, 7]
+    assert topo.n_groups(30) == 8
+    topo.check_group_count(8)
+    with pytest.raises(ValueError):
+        topo.check_group_count(9)
+    shape = topo.shape(30)
+    assert [t["tier"] for t in shape["tiers"]] == ["node", "group", "fleet"]
+
+
+# ---------------------------------------------------------------------------
+# shed accounting end to end (agent header -> aggregator counters)
+# ---------------------------------------------------------------------------
+
+class _TableCollector:
+    """Minimal collector: NodeAgent only touches drain_columns + buffer."""
+
+    def __init__(self, capacity=4096):
+        self.buffer = EventTable(capacity)
+
+    def drain_columns(self):
+        return self.buffer.drain_columns()
+
+
+def test_shed_count_rides_the_wire_and_is_accounted():
+    from repro.stream.agent import NodeAgent
+
+    col = _TableCollector()
+    col.buffer.append_rows(
+        Layer.OPERATOR, name="op", ts=np.arange(500, dtype=np.float64),
+        dur=1.0, step=np.arange(500, dtype=np.int64))
+    gov = BackpressureGovernor(100, min_per_layer=8)
+    agent = NodeAgent(0, col, governor=gov)
+    agg = FleetAggregator(horizon_s=1e9)
+    buf = agent.flush()
+    batch = wire.decode(buf)
+    assert batch.shed == 400
+    agg.ingest(buf)
+    # zero silent loss: generated == ingested + shed, both sides agree
+    assert agg.events_shed_at_source == agent.events_shed == 400
+    assert col.buffer.pushed == agg.events_ingested + agg.events_shed_at_source
+
+
+# ---------------------------------------------------------------------------
+# out-of-order delivery (satellite: freshness + loss accounting)
+# ---------------------------------------------------------------------------
+
+def _batch(node, seq, t0, n=8):
+    return wire.encode_events(
+        [Event(layer=Layer.OPERATOR, name="op", ts=t0 + 0.01 * i, dur=1e-4,
+               step=seq * n + i) for i in range(n)],
+        node_id=node, seq=seq)
+
+
+def test_late_batch_fills_gap_and_freshness_is_event_time():
+    agg = FleetAggregator(horizon_s=1e9)
+    agg.ingest(_batch(1, 0, t0=0.0))
+    agg.ingest(_batch(1, 3, t0=3.0))  # gap: seqs 1, 2 missing
+    assert agg.lost_batches == 2
+    # late deliveries uncount themselves ...
+    agg.ingest(_batch(1, 2, t0=2.0))
+    agg.ingest(_batch(1, 1, t0=1.0))
+    assert agg.lost_batches == 0
+    # ... and an old batch never rewinds the node's freshness clock
+    assert agg.node_last_ts[1] == pytest.approx(3.07, abs=1e-6)
+    assert agg.t_latest == pytest.approx(3.07, abs=1e-6)
+    # a duplicate of an already-seen seq is not a loss either
+    agg.ingest(_batch(1, 3, t0=3.0))
+    assert agg.lost_batches == 0
+
+
+def test_shuffled_delivery_matches_in_order_accounting():
+    """Regression: any arrival order of the same batches converges to the
+    same ingest/loss/freshness numbers."""
+    rng = np.random.default_rng(7)
+    batches = [(node, seq) for node in (0, 1) for seq in range(20)]
+    expected_events = len(batches) * 8
+
+    def run(order):
+        agg = FleetAggregator(horizon_s=1e9)
+        for node, seq in order:
+            agg.ingest(_batch(node, seq, t0=float(seq)))
+        return agg
+
+    ordered = run(batches)
+    shuffled = run(rng.permutation(np.array(
+        batches, dtype=[("n", int), ("s", int)])).tolist())
+    for agg in (ordered, shuffled):
+        assert agg.events_ingested == expected_events
+        assert agg.lost_batches == 0
+        assert agg.node_last_ts[0] == agg.node_last_ts[1]
+        assert agg.node_last_ts[0] == pytest.approx(19.07, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# cross-group incident merge (satellite: ONE fleet incident)
+# ---------------------------------------------------------------------------
+
+def _fill_node(col, rng, step_lo, step_hi, faulty=False,
+               fault_steps=()):
+    steps = np.arange(step_lo, step_hi, dtype=np.int64)
+    t = 0.02 * steps.astype(np.float64)
+    scale = np.ones(steps.size)
+    if faulty:
+        scale[np.isin(steps, list(fault_steps))] = 8.0
+    for k, base in enumerate((1e-3, 2e-3, 5e-4)):
+        col.buffer.append_rows(
+            Layer.OPERATOR, name=f"op{k}", ts=t + 1e-4 * k,
+            dur=base * scale * rng.lognormal(0, 0.05, steps.size),
+            size=1e5, step=steps)
+    col.buffer.append_rows(
+        Layer.STEP, name="train_step", ts=t,
+        dur=3e-3 * scale * rng.lognormal(0, 0.05, steps.size), step=steps)
+
+
+def _tree_fault_run(faulty_nodes):
+    """8 nodes in 2 groups of 4; `faulty_nodes` get an operator-latency
+    fault over the same live window."""
+    rng = np.random.default_rng(0)
+    topo = TopologySpec(group_size=4, fan_in=8)
+    # contamination + gap tight enough that clean-tail noise neither gets
+    # flagged in volume nor chains across ticks into a cluster; the fault
+    # flags every step in its window (0.02 s apart << gap), so the real
+    # cluster stays intact
+    mon = HierarchicalMonitor(topo, horizon_s=1e9, min_events=64,
+                              contamination=0.002, incident_gap_s=0.1,
+                              incident_close_after_s=0.5, min_flags=8,
+                              seed=0)
+    cols = {}
+    for nid in range(8):
+        cols[nid] = _TableCollector(capacity=1 << 15)
+        mon.register_node(nid, cols[nid])
+    assert sorted(mon.groups) == [0, 1]
+    for nid, col in cols.items():
+        _fill_node(col, rng, 0, 100)
+    assert mon.warmup()
+    fault_steps = set(range(140, 160))
+    for lo in range(100, 200, 20):
+        for nid, col in cols.items():
+            _fill_node(col, rng, lo, lo + 20, faulty=nid in faulty_nodes,
+                       fault_steps=fault_steps)
+        mon.tick()
+    mon.finish()
+    return mon
+
+
+def test_fault_spanning_two_groups_yields_one_incident():
+    faulty = (1, 5)  # node 1 lives in group 0, node 5 in group 1
+    mon = _tree_fault_run(faulty)
+    ops = [i for i in mon.incidents if i.suspect_layer == Layer.OPERATOR]
+    assert len(ops) == 1, (
+        f"cross-group flags over one fault window must merge into ONE "
+        f"fleet incident, got {len(ops)}")
+    inc = ops[0]
+    # both groups' faulty nodes are attributed on the single incident
+    assert set(faulty) <= set(inc.suspect_nodes)
+    assert set(faulty) <= set(inc.node_flags)
+    assert len(set(inc.steps) & set(range(140, 160))) >= 10
+
+
+def test_clean_fleet_produces_zero_incidents():
+    mon = _tree_fault_run(())
+    assert mon.incidents == []
+
+
+# ---------------------------------------------------------------------------
+# spec-driven session integration
+# ---------------------------------------------------------------------------
+
+def test_session_stream_with_topology_end_to_end(tmp_path):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.session import DetectorSpec, MonitorSpec, Session
+
+    spec = MonitorSpec(
+        mode="stream",
+        probes=["operator", "step"],
+        detector=DetectorSpec(min_events=32, flush_every=8,
+                              incident_gap_s=10.0,
+                              incident_close_after_s=0.1, min_flags=4),
+        topology={"group_size": 2, "fan_in": 32},
+        governor=False)
+    session = Session(spec)
+
+    @jax.jit
+    def step(x):
+        return (x @ jnp.sin(x)) / jnp.maximum(jnp.abs(x).sum(), 1.0)
+
+    fns, xs = {}, {}
+    for nid in range(4):
+        node = session.node(nid)
+        xs[nid] = jnp.ones((32, 32)) * (1 + nid)
+        fns[nid] = node.observe_step_fn(step, sample_args=(xs[nid],))
+    with session.monitoring():
+        for s in range(24):
+            for nid in fns:
+                xs[nid] = fns[nid](xs[nid])
+        session.warmup()
+        for s in range(24):
+            for nid in fns:
+                xs[nid] = fns[nid](xs[nid])
+            session.on_step(s)
+    mon = session._backend.monitor
+    assert isinstance(mon, HierarchicalMonitor)
+    assert sorted(mon.groups) == [0, 1]  # 4 nodes / group_size 2
+    report = session.result()
+    assert report.mode == "stream"
+    stream = report.overhead["stream"]
+    assert stream["topology"]["group_size"] == 2
+    assert stream["aggregator"]["nodes"] == 4
+    losses = report.collection_losses()
+    assert set(losses) == {"dropped", "shed", "names_truncated"}
+    assert losses["shed"] == 0  # no governor configured -> nothing shed

@@ -20,6 +20,10 @@ Two families of checks, both run by CI and by tests/test_docs.py:
   family the monitor registers (`repro.obs.METRIC_NAMES`) and both live
   sink kinds (`prometheus`, `board`) — the metric catalogue is only a
   catalogue while it is complete.
+* **fleet**: docs/fleet.md must document every `TopologySpec` field and
+  every supported wire version (``v1``/``v2``/``v3``, from
+  `repro.stream.wire.SUPPORTED_VERSIONS`) plus the named version-mismatch
+  error — the scale-out reference must track the topology schema.
 
 Exit code 0 = clean; 1 = problems (printed one per line).
 """
@@ -180,10 +184,40 @@ def check_observability() -> List[str]:
     return problems
 
 
+def check_fleet() -> List[str]:
+    """Fleet-plane reference coverage: every TopologySpec field and every
+    supported wire version must appear in docs/fleet.md (drift gate: a new
+    topology knob or wire bump without docs fails CI)."""
+    import dataclasses
+
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.fleet.topology import TopologySpec
+    from repro.stream import wire
+
+    path = os.path.join(REPO, "docs", "fleet.md")
+    rel = os.path.relpath(path, REPO)
+    if not os.path.exists(path):
+        return [f"{rel}: missing (the fleet-plane reference is required)"]
+    text = open(path).read()
+    problems = []
+    for field in dataclasses.fields(TopologySpec):
+        if f"`{field.name}`" not in text:
+            problems.append(
+                f"{rel}: topology field `{field.name}` is undocumented")
+    for version in wire.SUPPORTED_VERSIONS:
+        if f"`v{version}`" not in text:
+            problems.append(
+                f"{rel}: supported wire version `v{version}` is "
+                "undocumented")
+    if f"`{wire.WireVersionError.__name__}`" not in text:
+        problems.append(f"{rel}: `WireVersionError` is undocumented")
+    return problems
+
+
 def main() -> int:
     files = doc_files()
     problems = (check_links(files) + check_spec_reference()
-                + check_runbook() + check_observability())
+                + check_runbook() + check_observability() + check_fleet())
     for p in problems:
         print(p)
     print(f"checked {len(files)} file(s): "
