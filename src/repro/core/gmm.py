@@ -186,7 +186,8 @@ def fit_gmm_streaming(X, key, *, n_components: int, n_iters: int = 50,
                       reg: float = 1e-6, block_n: int = 4096,
                       backend: str = "auto",
                       params0: Optional[GMMParams] = None):
-    """EM where each iteration is a single fused pass over X (kernels.gmm_stats).
+    """EM where each iteration is a single fused pass over X
+    (kernels.gmm_update: E-step stats + M-step mean/cov in one launch).
 
     Mathematically identical to fit_gmm (same E/M updates); memory is O(K*D^2)
     instead of O(N*K). This is how the detector refits on >1M-event production
@@ -204,12 +205,62 @@ def fit_gmm_streaming(X, key, *, n_components: int, n_iters: int = 50,
     log_w, means, prec = _init_params(X, key, K, reg, params0)
     lls = []
     for _ in range(n_iters):
-        nk, sx, sxx, ll = ops.gmm_stats(X, log_w, means, prec,
-                                        backend=backend, block_n=block_n)
-        nk = nk + 1e-10
-        means = sx / nk[:, None]
-        cov = sxx / nk[:, None, None] - jnp.einsum("kd,ke->kde", means, means)
+        nk, means, cov, ll = ops.gmm_update(X, log_w, means, prec,
+                                            backend=backend, block_n=block_n)
         prec = _prec_chol_from_cov(cov, reg)
-        log_w = jnp.log(nk / N)
+        log_w = jnp.log((nk + 1e-10) / N)
         lls.append(float(ll) / N)
     return GMMParams(log_w, means, prec), jnp.asarray(lls)
+
+
+# ---------------------------------------------------------------------------
+# Incremental (stepwise) EM: fold fresh rows into persistent per-sample
+# sufficient statistics instead of refitting on a bootstrap of the window
+# ---------------------------------------------------------------------------
+
+
+class SuffStats(NamedTuple):
+    """Per-sample averaged EM sufficient statistics: ``nk`` sums to 1 over
+    components, ``sx``/``sxx`` are responsibility-weighted first/second
+    moments divided by the batch size. Averaged (not summed) so batches of
+    different sizes fold with a simple convex combination."""
+
+    nk: jnp.ndarray  # (K,)
+    sx: jnp.ndarray  # (K, D)
+    sxx: jnp.ndarray  # (K, D, D)
+
+
+def stats_from_batch(X, params: GMMParams, *, nvalid: Optional[int] = None,
+                     backend: str = "auto", block_n: int = 4096
+                     ) -> Tuple[SuffStats, float]:
+    """One fused E-step pass over a batch -> (per-sample stats, mean ll).
+
+    ``nvalid`` supports bucketed shapes: X may be zero-padded to a fixed
+    power-of-two row count, with only the first ``nvalid`` rows real."""
+    from repro.kernels import ops
+
+    n = X.shape[0] if nvalid is None else int(nvalid)
+    nk, sx, sxx, ll = ops.gmm_stats(jnp.asarray(X, jnp.float32),
+                                    params.log_weights, params.means,
+                                    params.prec_chol, nvalid=nvalid,
+                                    backend=backend, block_n=block_n)
+    n = max(n, 1)
+    return SuffStats(nk / n, sx / n, sxx / n), float(ll) / n
+
+
+def fold_stats(old: SuffStats, new: SuffStats, rho: float) -> SuffStats:
+    """Stepwise-EM fold (Cappé & Moulines): s <- (1-rho) s + rho s_new."""
+    rho = float(rho)
+    return SuffStats(*((1.0 - rho) * o + rho * n
+                       for o, n in zip(old, new)))
+
+
+def params_from_stats(stats: SuffStats, reg: float = 1e-6) -> GMMParams:
+    """M-step from folded per-sample statistics (tiny: O(K D^2) + a (K,D,D)
+    Cholesky — the only non-kernel work of an incremental refit)."""
+    nk = jnp.asarray(stats.nk, jnp.float32) + 1e-10
+    means = jnp.asarray(stats.sx, jnp.float32) / nk[:, None]
+    cov = (jnp.asarray(stats.sxx, jnp.float32) / nk[:, None, None]
+           - jnp.einsum("kd,ke->kde", means, means))
+    log_w = jnp.log(nk / jnp.sum(nk))
+    return GMMParams(log_w, means, _prec_chol_from_cov(cov, reg))

@@ -15,6 +15,7 @@ import jax
 
 from repro.core.events import Layer
 from repro.core.probes.base import Probe
+from repro.detect.guard import in_detection_zone
 
 
 class JaxRuntimeProbe(Probe):
@@ -26,7 +27,16 @@ class JaxRuntimeProbe(Probe):
         self._evt_listener: Callable = None
 
     def _attach(self) -> None:
+        # jax.monitoring listeners are GLOBAL (every thread's compiles and
+        # dispatches land here). The async detection plane runs EM on a
+        # background worker while this probe stays attached, so listeners
+        # drop events originating inside a detection sweep — otherwise each
+        # sweep would inject its own compile/dispatch events into the very
+        # stream it is scoring (the step thread's synchronous sweeps handle
+        # this by detaching the probe; see Session._detection_pause).
         def on_duration(name: str, secs: float, **kw):
+            if in_detection_zone():
+                return
             extra = {k: v for k, v in kw.items()
                      if isinstance(v, (int, float, str))}
             self.emit_rows(Layer.XLA, name, self.now(), dur=secs,
@@ -35,6 +45,8 @@ class JaxRuntimeProbe(Probe):
                            if extra else "")
 
         def on_event(name: str, **kw):
+            if in_detection_zone():
+                return
             self.emit_rows(Layer.XLA, name, self.now(), pid=os.getpid())
 
         self._dur_listener = on_duration

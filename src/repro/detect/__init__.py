@@ -1,0 +1,24 @@
+"""Async detection plane: background sweeps, shape buckets, sweep guard.
+
+Everything here exists so that GMM sweeps (EM refits + window scoring) run
+*off* the step/ingest thread, on snapshots, with results admitted back at
+the next cadence point — see docs/detection.md for the hand-off contract.
+"""
+from repro.detect.cache import (MIN_BUCKET, SHAPE_CACHE, ShapeBucketCache,
+                                bucket_rows, enable_persistent_cache,
+                                pad_to_bucket)
+from repro.detect.executor import DetectionExecutor, SweepResult
+from repro.detect.guard import detection_zone, in_detection_zone
+
+__all__ = [
+    "MIN_BUCKET",
+    "SHAPE_CACHE",
+    "ShapeBucketCache",
+    "bucket_rows",
+    "enable_persistent_cache",
+    "pad_to_bucket",
+    "DetectionExecutor",
+    "SweepResult",
+    "detection_zone",
+    "in_detection_zone",
+]

@@ -1,0 +1,37 @@
+"""Thread-local detection-zone guard.
+
+Background detection sweeps run JAX work (EM iterations, scoring kernels) on
+the executor's worker thread. The XLA runtime probe registers *global*
+``jax.monitoring`` listeners, so without a guard those sweeps would show up
+in the very event stream they analyse — a feedback loop where each sweep
+manufactures XLA "anomalies" for the next one.
+
+The Python probe needs no guard (``sys.setprofile`` is per-thread and is
+never installed on the worker), but the XLA listeners check
+``in_detection_zone()`` and drop events originating from a sweep.
+
+The zone is a depth counter (re-entrant) in thread-local storage, so the
+step thread's own synchronous sweeps — already bracketed by the session's
+``_detection_pause`` — compose with it without interference.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_local = threading.local()
+
+
+def in_detection_zone() -> bool:
+    """True iff the *current thread* is inside a detection sweep."""
+    return getattr(_local, "depth", 0) > 0
+
+
+@contextlib.contextmanager
+def detection_zone():
+    """Mark the current thread as running detection work (re-entrant)."""
+    _local.depth = getattr(_local, "depth", 0) + 1
+    try:
+        yield
+    finally:
+        _local.depth -= 1

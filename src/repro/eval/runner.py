@@ -76,7 +76,12 @@ class EvalConfig:
             horizon_s=self.horizon_s,
             # synthetic runs compress a "fleet minute" into ~1 wall second,
             # so incident clustering runs at a matching time scale
-            incident_gap_s=0.25, incident_close_after_s=0.25, min_flags=5)
+            incident_gap_s=0.25, incident_close_after_s=0.25, min_flags=5,
+            # scoring compares flags against per-step ground truth, so
+            # sweeps must publish at the cadence point that snapshotted
+            # them — the thread executor's staleness would smear flags
+            # across label windows and make cells runner-load dependent
+            executor="inline")
 
 
 @dataclasses.dataclass

@@ -25,7 +25,8 @@ class GroupAggregator:
     def __init__(self, group_id: int, capacity_per_layer: int = 65536,
                  horizon_s: float = 60.0, n_components: int = 3,
                  contamination: float = 0.02, min_events: int = 64,
-                 seed: int = 0, drift_tol: float = 3.0, track: bool = True):
+                 seed: int = 0, drift_tol: float = 3.0, track: bool = True,
+                 incremental: bool = True):
         self.group_id = int(group_id)
         self.agg = FleetAggregator(capacity_per_layer=capacity_per_layer,
                                    horizon_s=horizon_s)
@@ -33,7 +34,7 @@ class GroupAggregator:
         self.detector = OnlineGMMDetector(
             n_components=n_components, contamination=contamination,
             min_events=min_events, seed=seed + self.group_id,
-            drift_tol=drift_tol)
+            drift_tol=drift_tol, incremental=incremental)
         self.detector.track = track
         self.ingest_seconds = 0.0  # group-tier critical-path accounting
         self.detect_seconds = 0.0

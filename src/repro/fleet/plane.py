@@ -26,8 +26,9 @@ monitor.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -41,7 +42,20 @@ from repro.stream.agent import NodeAgent
 from repro.stream.incidents import Incident, IncidentEngine
 from repro.stream.monitor import export_windows_trace
 from repro.stream.online import WindowDetection
-from repro.stream.window import LayerWindow
+from repro.stream.window import AggSnapshot, LayerWindow
+
+
+@dataclasses.dataclass
+class FleetSweepOutcome:
+    """Off-thread result of one hierarchical detection sweep, pending
+    admission on the step thread (the plane-level `SweepOutcome`)."""
+
+    per_group: Dict[int, Dict[Layer, WindowDetection]]
+    # late-warmup floors recorded against the SNAPSHOT's membership/clock:
+    # (layer, node_id, floor_ts) triples, applied at admit
+    floors: List[Tuple[Layer, int, float]]
+    t_latest: float
+    detect_s: float
 
 
 class _MergedWindow:
@@ -202,7 +216,8 @@ class HierarchicalMonitor:
                  incident_gap_s: float = 1.0,
                  incident_close_after_s: float = 2.0, min_flags: int = 8,
                  seed: int = 0, drift_tol: float = 3.0, track: bool = True,
-                 wire_version: Optional[int] = None):
+                 wire_version: Optional[int] = None,
+                 incremental: bool = True):
         self.topology = FleetTopology(topology)
         self.horizon_s = float(horizon_s)
         self.wire_version = (wire.VERSION if wire_version is None
@@ -211,7 +226,7 @@ class HierarchicalMonitor:
             capacity_per_layer=capacity_per_layer, horizon_s=horizon_s,
             n_components=n_components, contamination=contamination,
             min_events=min_events, seed=seed, drift_tol=drift_tol,
-            track=track)
+            track=track, incremental=incremental)
         self.engine = IncidentEngine(gap_s=incident_gap_s,
                                      close_after_s=incident_close_after_s,
                                      min_flags=min_flags)
@@ -304,6 +319,59 @@ class HierarchicalMonitor:
         dt = time.perf_counter() - t0
         self.detect_seconds += dt
         self.last_detect_ms = 1e3 * dt
+        self.ticks += 1
+        return closed
+
+    # -- async trio (poll/freeze -> detect off-thread -> admit) ---------------
+    # tick() == admit(detect_snapshot(snapshot())) when nothing ingests in
+    # between; the async plane runs the middle call on the executor worker.
+
+    def snapshot(self) -> Optional[Dict[int, AggSnapshot]]:
+        """Step-thread half: poll agents, freeze every group's windows.
+        Returns None before any group has warmed."""
+        self.poll()
+        if not self.warmed:
+            return None
+        return {gid: g.agg.freeze() for gid, g in self.groups.items()}
+
+    def detect_snapshot(self, snaps: Dict[int, AggSnapshot]
+                        ) -> FleetSweepOutcome:
+        """Worker half: per-group late-warmup + detect against frozen
+        snapshots. Mutates only the group detectors (serialised by the
+        executor); the shared incident engine is untouched until admit."""
+        t0 = time.perf_counter()
+        per_group: Dict[int, Dict[Layer, WindowDetection]] = {}
+        floors: List[Tuple[Layer, int, float]] = []
+        t_latest = 0.0
+        for gid, snap in snaps.items():
+            g = self.groups[gid]
+            for layer in g.detector.warmup(snap):
+                floors.extend((layer, nid, snap.t_latest)
+                              for nid in snap.nodes_seen)
+            if g.warmed:
+                t1 = time.perf_counter()
+                per_group[gid] = g.detector.detect(snap)
+                g.detect_seconds += time.perf_counter() - t1
+            t_latest = max(t_latest, snap.t_latest)
+        return FleetSweepOutcome(per_group=per_group, floors=floors,
+                                 t_latest=t_latest,
+                                 detect_s=time.perf_counter() - t0)
+
+    def admit(self, outcome: FleetSweepOutcome) -> List[Incident]:
+        """Step-thread half two: publish a sweep — floors, fleet-tier
+        incident merge, tick accounting."""
+        for layer, nid, ts in outcome.floors:
+            self.engine.set_node_floor(layer, nid, ts)
+        t1 = time.perf_counter()
+        t_max = outcome.t_latest
+        for dets in outcome.per_group.values():
+            t_max = max(t_max, self.engine.ingest(dets))
+        closed = self.engine.finalise(t_max)
+        merge_dt = time.perf_counter() - t1
+        self.merge_seconds += merge_dt
+        self.last_detections = merge_detections(outcome.per_group)
+        self.detect_seconds += outcome.detect_s + merge_dt
+        self.last_detect_ms = 1e3 * (outcome.detect_s + merge_dt)
         self.ticks += 1
         return closed
 

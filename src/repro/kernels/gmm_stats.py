@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: fused GMM E-step sufficient statistics.
+"""Pallas TPU kernels: fused GMM E-step sufficient statistics + fused E+M
+update.
 
 Streaming EM: one pass over X computes (N_k, sum_k gamma x, sum_k gamma xx^T,
 sum log-likelihood) with VMEM-resident accumulators, never materialising the
@@ -6,8 +7,18 @@ sum log-likelihood) with VMEM-resident accumulators, never materialising the
 from 4 HBM passes (logp, resp, resp@X, cov einsum) to exactly one read of X —
 the TPU-native restructuring of the paper's sklearn EM (DESIGN.md §5).
 
+`gmm_update_pallas` goes one step further and fuses the M-step itself into
+the final grid block: the same single pass over X returns the *updated*
+means and covariances (plus nk and the data log-likelihood), so one EM
+iteration is exactly one kernel launch + a tiny (K, D, D) host-side Cholesky.
+
+Both kernels take an ``nvalid`` row count so callers can pad N to a fixed
+power-of-two bucket (see `repro.detect.cache`) and reuse one compiled
+executable across the sliding-window sizes a streaming detector sees.
+
 The grid dimension over N-blocks is sequential on TPU, so the accumulator
-pattern (init at program_id==0, += afterwards) is race-free by construction.
+pattern (init at program_id==0, += afterwards, finalise at the last block)
+is race-free by construction.
 """
 from __future__ import annotations
 
@@ -21,9 +32,9 @@ from jax.experimental import pallas as pl
 LOG2PI = float(np.log(2.0 * np.pi))
 
 
-def _stats_kernel(x_ref, logw_ref, mu_u_ref, u_ref, logdet_ref, nvalid_ref,
-                  nk_ref, sx_ref, sxx_ref, ll_ref):
-    i = pl.program_id(0)
+def _accumulate_estep(i, x_ref, logw_ref, mu_u_ref, u_ref, logdet_ref,
+                      nvalid_ref, nk_ref, sx_ref, sxx_ref, ll_ref):
+    """Shared E-step body: accumulate (nk, sx, sxx, ll) for one N-block."""
     x = x_ref[...].astype(jnp.float32)  # (bn, D)
     u = u_ref[...].astype(jnp.float32)  # (K, D, D)
     K, D, _ = u.shape
@@ -66,13 +77,34 @@ def _stats_kernel(x_ref, logw_ref, mu_u_ref, u_ref, logdet_ref, nvalid_ref,
     ll_ref[...] += jnp.sum(norm)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def gmm_stats_pallas(X, log_weights, means, prec_chol, *, block_n: int = 1024,
-                     interpret: bool = False):
-    """One-pass E-step stats: (nk (K,), sx (K,D), sxx (K,D,D), ll ())."""
-    N, D = X.shape
-    K = means.shape[0]
-    n_blocks = pl.cdiv(N, block_n)
+def _stats_kernel(x_ref, logw_ref, mu_u_ref, u_ref, logdet_ref, nvalid_ref,
+                  nk_ref, sx_ref, sxx_ref, ll_ref):
+    i = pl.program_id(0)
+    _accumulate_estep(i, x_ref, logw_ref, mu_u_ref, u_ref, logdet_ref,
+                      nvalid_ref, nk_ref, sx_ref, sxx_ref, ll_ref)
+
+
+def _update_kernel(x_ref, logw_ref, mu_u_ref, u_ref, logdet_ref, nvalid_ref,
+                   nk_ref, mean_ref, cov_ref, ll_ref):
+    """Fused E+M: accumulate stats, then finalise the M-step in the last
+    grid block (mean_ref carries sx until then, cov_ref carries sxx)."""
+    i = pl.program_id(0)
+    _accumulate_estep(i, x_ref, logw_ref, mu_u_ref, u_ref, logdet_ref,
+                      nvalid_ref, nk_ref, mean_ref, cov_ref, ll_ref)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _m_step():
+        nk = nk_ref[...] + 1e-10
+        mu = mean_ref[...] / nk[:, None]
+        cov = cov_ref[...] / nk[:, None, None] - mu[:, :, None] * mu[:, None, :]
+        mean_ref[...] = mu
+        cov_ref[...] = cov
+
+
+def _prepare(X, means, prec_chol, nvalid, block_n):
+    """Shared launch prep: pad X to whole blocks, precompute mu_u/logdet."""
+    N = X.shape[0]
+    n_blocks = max(1, pl.cdiv(N, block_n))
     pad = n_blocks * block_n - N
     if pad:
         X = jnp.pad(X, ((0, pad), (0, 0)))
@@ -80,11 +112,18 @@ def gmm_stats_pallas(X, log_weights, means, prec_chol, *, block_n: int = 1024,
                       prec_chol.astype(jnp.float32))
     logdet = jnp.sum(jnp.log(jnp.abs(
         jnp.diagonal(prec_chol, axis1=-2, axis2=-1))), axis=-1)
-    nvalid = jnp.array([N], jnp.int32)
+    if nvalid is None:
+        nvalid = N
+    nvalid = jnp.asarray(nvalid, jnp.int32).reshape(1)
+    return X, mu_u, logdet, nvalid, n_blocks
 
+
+def _launch(kernel, X, log_weights, mu_u, prec_chol, logdet, nvalid,
+            n_blocks, block_n, interpret):
+    K, D = mu_u.shape
     full = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
-    nk, sx, sxx, ll = pl.pallas_call(
-        _stats_kernel,
+    return pl.pallas_call(
+        kernel,
         grid=(n_blocks,),
         in_specs=[
             pl.BlockSpec((block_n, D), lambda i: (i, 0)),
@@ -99,4 +138,31 @@ def gmm_stats_pallas(X, log_weights, means, prec_chol, *, block_n: int = 1024,
         ],
         interpret=interpret,
     )(X, log_weights, mu_u, prec_chol, logdet, nvalid)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gmm_stats_pallas(X, log_weights, means, prec_chol, *, nvalid=None,
+                     block_n: int = 1024, interpret: bool = False):
+    """One-pass E-step stats: (nk (K,), sx (K,D), sxx (K,D,D), ll ()).
+
+    ``nvalid`` (int, <= N) marks rows past it as padding — pass bucketed,
+    zero-padded X with the true row count to reuse one compiled shape."""
+    X, mu_u, logdet, nvalid, n_blocks = _prepare(X, means, prec_chol,
+                                                 nvalid, block_n)
+    nk, sx, sxx, ll = _launch(_stats_kernel, X, log_weights, mu_u, prec_chol,
+                              logdet, nvalid, n_blocks, block_n, interpret)
     return nk, sx, sxx, ll[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gmm_update_pallas(X, log_weights, means, prec_chol, *, nvalid=None,
+                      block_n: int = 1024, interpret: bool = False):
+    """Fused EM iteration: one pass over X returns the M-step outputs
+    (nk (K,), means_new (K,D), cov_new (K,D,D), ll ()). The caller only
+    re-parameterises cov_new (Cholesky) and renormalises weights —
+    O(K D^2) host work against one kernel launch."""
+    X, mu_u, logdet, nvalid, n_blocks = _prepare(X, means, prec_chol,
+                                                 nvalid, block_n)
+    nk, mu, cov, ll = _launch(_update_kernel, X, log_weights, mu_u, prec_chol,
+                              logdet, nvalid, n_blocks, block_n, interpret)
+    return nk, mu, cov, ll[0]

@@ -2,14 +2,26 @@
 
 ``backend`` override: "auto" (default), "pallas" (forced, interpret-mode on
 CPU — used by the allclose tests), "jnp" (oracle).
+
+Every op takes an optional ``nvalid`` row count: callers that pad N to a
+fixed power-of-two bucket (see `repro.detect.cache`) pass the true row count
+so both backends mask the padding identically and one compiled executable
+serves every window size in the bucket.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 
 from repro.kernels import ref
 from repro.kernels.gmm_score import gmm_best_pallas, gmm_score_pallas
-from repro.kernels.gmm_stats import gmm_stats_pallas
+from repro.kernels.gmm_stats import gmm_stats_pallas, gmm_update_pallas
+
+# jit'd oracle wrappers: the CPU path runs these inside EM loops, where
+# eager dispatch per jnp op would dominate the math
+_stats_ref = jax.jit(ref.gmm_stats_ref)
+_update_ref = jax.jit(ref.gmm_update_ref)
 
 
 def _on_tpu() -> bool:
@@ -30,9 +42,28 @@ def gmm_best(X, means, prec_chol, *, backend: str = "auto", block_n: int = 1024)
     return ref.gmm_best_ref(X, means, prec_chol)
 
 
-def gmm_stats(X, log_weights, means, prec_chol, *, backend: str = "auto",
-              block_n: int = 1024):
+def gmm_stats(X, log_weights, means, prec_chol, *, nvalid=None,
+              backend: str = "auto", block_n: int = 1024):
+    """E-step sufficient statistics (nk, sx, sxx, ll_sum); rows at index
+    >= ``nvalid`` are padding."""
     if backend == "pallas" or (backend == "auto" and _on_tpu()):
         return gmm_stats_pallas(X, log_weights, means, prec_chol,
-                                block_n=block_n, interpret=not _on_tpu())
-    return ref.gmm_stats_ref(X, log_weights, means, prec_chol)
+                                nvalid=nvalid, block_n=block_n,
+                                interpret=not _on_tpu())
+    if nvalid is None:
+        return _stats_ref(X, log_weights, means, prec_chol)
+    return _stats_ref(X, log_weights, means, prec_chol, nvalid)
+
+
+def gmm_update(X, log_weights, means, prec_chol, *, nvalid=None,
+               backend: str = "auto", block_n: int = 1024):
+    """One fused EM iteration: (nk, means_new, cov_new, ll_sum) in a single
+    pass over X — the caller only re-parameterises cov and renormalises
+    weights. Rows at index >= ``nvalid`` are padding."""
+    if backend == "pallas" or (backend == "auto" and _on_tpu()):
+        return gmm_update_pallas(X, log_weights, means, prec_chol,
+                                 nvalid=nvalid, block_n=block_n,
+                                 interpret=not _on_tpu())
+    if nvalid is None:
+        return _update_ref(X, log_weights, means, prec_chol)
+    return _update_ref(X, log_weights, means, prec_chol, nvalid)

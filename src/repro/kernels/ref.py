@@ -35,11 +35,13 @@ def gmm_best_ref(X, means, prec_chol):
 
 
 def gmm_stats_ref(X: jnp.ndarray, log_weights: jnp.ndarray, means: jnp.ndarray,
-                  prec_chol: jnp.ndarray):
+                  prec_chol: jnp.ndarray, nvalid=None):
     """Fused E-step sufficient statistics (single pass over X).
 
     Returns (nk (K,), sx (K, D), sxx (K, D, D), ll_sum ()) where resp is the
-    posterior responsibility matrix softmax_k(log_w + log_p).
+    posterior responsibility matrix softmax_k(log_w + log_p). Rows at index
+    >= ``nvalid`` are padding and contribute nothing (mirrors the Pallas
+    kernel's bucketed-shape contract).
     """
     X = X.astype(jnp.float32)
     log_p = gmm_score_ref(X, means, prec_chol)  # (N, K)
@@ -47,7 +49,26 @@ def gmm_stats_ref(X: jnp.ndarray, log_weights: jnp.ndarray, means: jnp.ndarray,
     m = jnp.max(log_r, axis=1, keepdims=True)
     norm = m + jnp.log(jnp.sum(jnp.exp(log_r - m), axis=1, keepdims=True))
     resp = jnp.exp(log_r - norm)  # (N, K)
+    if nvalid is not None:
+        valid = (jnp.arange(X.shape[0]) < nvalid).astype(jnp.float32)
+        resp = resp * valid[:, None]
+        norm = norm * valid[:, None]
     nk = jnp.sum(resp, axis=0)
     sx = resp.T @ X  # (K, D)
     sxx = jnp.einsum("nk,nd,ne->kde", resp, X, X)
     return nk, sx, sxx, jnp.sum(norm)
+
+
+def gmm_update_ref(X: jnp.ndarray, log_weights: jnp.ndarray,
+                   means: jnp.ndarray, prec_chol: jnp.ndarray, nvalid=None):
+    """One fused EM iteration: E-step stats + M-step mean/covariance.
+
+    Returns (nk (K,), means_new (K, D), cov_new (K, D, D), ll_sum ()) — the
+    oracle for `gmm_update_pallas`. The caller re-parameterises cov
+    (Cholesky) and renormalises weights.
+    """
+    nk, sx, sxx, ll = gmm_stats_ref(X, log_weights, means, prec_chol, nvalid)
+    denom = nk + 1e-10
+    mu = sx / denom[:, None]
+    cov = sxx / denom[:, None, None] - jnp.einsum("kd,ke->kde", mu, mu)
+    return nk, mu, cov, ll

@@ -75,6 +75,18 @@ METRIC_NAMES = (
     "eacgm_detector_flag_rate",
     "eacgm_detect_ticks_total",
     "eacgm_detect_ms",
+    # async detection plane (repro.detect): executor + staleness + compile
+    # cache accounting
+    "eacgm_detect_sweeps_submitted_total",
+    "eacgm_detect_sweeps_completed_total",
+    "eacgm_detect_sweeps_coalesced_total",
+    "eacgm_detect_sweep_errors_total",
+    "eacgm_detect_queue_depth",
+    "eacgm_detect_busy_seconds_total",
+    "eacgm_detect_lag_seconds",
+    "eacgm_detect_lag_steps",
+    "eacgm_detect_compile_cache_hits_total",
+    "eacgm_detect_compile_cache_misses_total",
     # incidents, diagnoses, governor actions
     "eacgm_incident_pending_flags",
     "eacgm_incidents_total",
@@ -232,6 +244,41 @@ class SessionObs:
         self.detect_ms = r.histogram(
             "eacgm_detect_ms", "Per-sweep detection wall time (ms)",
             buckets=DETECT_MS_BUCKETS)
+        self.sweeps_submitted = r.counter(
+            "eacgm_detect_sweeps_submitted_total",
+            "Detection sweeps handed to the async executor")
+        self.sweeps_completed = r.counter(
+            "eacgm_detect_sweeps_completed_total",
+            "Detection sweeps the executor finished (including errors)")
+        self.sweeps_coalesced = r.counter(
+            "eacgm_detect_sweeps_coalesced_total",
+            "Queued sweeps replaced by a newer snapshot before starting "
+            "(backpressure: the plane is slower than the cadence)")
+        self.sweep_errors = r.counter(
+            "eacgm_detect_sweep_errors_total",
+            "Sweeps that raised on the executor worker")
+        self.detect_queue_depth = r.gauge(
+            "eacgm_detect_queue_depth",
+            "Sweeps queued or running on the executor right now")
+        self.detect_busy_s = r.counter(
+            "eacgm_detect_busy_seconds_total",
+            "Cumulative wall time the executor worker spent inside sweeps")
+        self.detect_lag_s = r.gauge(
+            "eacgm_detect_lag_seconds",
+            "Submit-to-finish latency of the most recently admitted sweep "
+            "(staleness of the published detections, wall clock)")
+        self.detect_lag_steps = r.gauge(
+            "eacgm_detect_lag_steps",
+            "Cadence points between the most recently admitted sweep's "
+            "snapshot and its publication (0 = same step / inline)")
+        self.compile_hits = r.counter(
+            "eacgm_detect_compile_cache_hits_total",
+            "Detection kernel calls that reused an already-compiled "
+            "shape-bucket signature")
+        self.compile_misses = r.counter(
+            "eacgm_detect_compile_cache_misses_total",
+            "Detection kernel calls whose shape-bucket signature compiled "
+            "for the first time this process")
         self.incident_pending = r.gauge(
             "eacgm_incident_pending_flags",
             "Flag rows pending in open (not yet finalised) incident "
@@ -276,6 +323,22 @@ class SessionObs:
             for layer, det in list(backend.flags().items()):
                 self.det_flag_rate.set(det.anomaly_rate, layer=layer.value)
                 self.det_delta.set(float(det.log_delta), layer=layer.value)
+        executor = getattr(s, "_executor", None)
+        if executor is not None:
+            st = executor.stats()
+            self.sweeps_submitted.set_total(st["submitted"])
+            self.sweeps_completed.set_total(st["completed"])
+            self.sweeps_coalesced.set_total(st["coalesced"])
+            self.sweep_errors.set_total(st["errors"])
+            self.detect_queue_depth.set(st["queue_depth"])
+            self.detect_busy_s.set_total(st["busy_seconds"])
+            self.detect_lag_s.set(s.async_lag_seconds)
+            self.detect_lag_steps.set(s.async_lag_steps)
+        from repro.detect import SHAPE_CACHE
+
+        cache = SHAPE_CACHE.stats()
+        self.compile_hits.set_total(cache["hits"])
+        self.compile_misses.set_total(cache["misses"])
         # incidents / diagnoses / actions accumulate on the session
         for layer, n in s.incident_counts().items():
             self.incidents_total.set_total(n, layer=layer)

@@ -108,7 +108,14 @@ class OnlineGMMBackend:
             seed=self.spec.seed)
         self.monitor.detector.drift_tol = self.spec.drift_tol
         self.monitor.detector.track = self.spec.warm_start
+        self.monitor.detector.incremental = self.spec.incremental
         self.closed: List[Incident] = []
+        # async plane state (attach_executor): staleness of the most
+        # recently admitted sweep + admission counters
+        self._executor = None
+        self.lag_steps = 0
+        self.lag_seconds = 0.0
+        self.sweeps_admitted = 0
 
     def configure_topology(self, topology) -> None:
         """Swap the flat `StreamMonitor` for a `HierarchicalMonitor` built
@@ -135,7 +142,8 @@ class OnlineGMMBackend:
             min_flags=self.spec.min_flags,
             seed=self.spec.seed,
             drift_tol=self.spec.drift_tol,
-            track=self.spec.warm_start)
+            track=self.spec.warm_start,
+            incremental=self.spec.incremental)
 
     @property
     def hierarchical(self) -> bool:
@@ -174,10 +182,48 @@ class OnlineGMMBackend:
         self.closed.extend(self.monitor.tick())
         return self.monitor.last_detections
 
-    def finish(self) -> List[Incident]:
+    # -- async plane ----------------------------------------------------------
+    def attach_executor(self, executor) -> None:
+        """Opt into the async detection plane: ``update_async`` freezes a
+        snapshot on the calling (step) thread, hands the sweep to this
+        executor, and admits whatever sweeps have completed."""
+        self._executor = executor
+
+    def update_async(self, step: int = 0) -> Dict[Layer, WindowDetection]:
+        """One async tick. With a thread executor the detections returned
+        are the most recently ADMITTED sweep's — typically the previous
+        cadence point's snapshot (staleness in ``lag_steps``/
+        ``lag_seconds``). With an inline executor this is byte-identical to
+        ``update()``."""
+        snap = self.monitor.snapshot()
+        if snap is None:
+            return self.monitor.last_detections
+        self._executor.submit(
+            "stream", lambda: self.monitor.detect_snapshot(snap), step=step)
+        self._admit_completed(step)
+        return self.monitor.last_detections
+
+    def _admit_completed(self, step: int) -> None:
+        for r in self._executor.drain():
+            if r.key != "stream":
+                continue
+            if r.error is not None:
+                raise r.error
+            self.closed.extend(self.monitor.admit(r.value))
+            self.lag_steps = step - r.step
+            self.lag_seconds = r.lag_s
+            self.sweeps_admitted += 1
+
+    def finish(self, step: int = 0) -> List[Incident]:
+        n_closed = len(self.closed)
+        if self._executor is not None:
+            # quiesce the plane: every submitted sweep lands before the
+            # final synchronous tick, so nothing is lost at shutdown
+            self._executor.flush()
+            self._admit_completed(step)
         closed = self.monitor.finish()
         self.closed.extend(closed)
-        return closed
+        return self.closed[n_closed:]
 
     def flags(self) -> Dict[Layer, WindowDetection]:
         return self.monitor.last_detections

@@ -83,11 +83,25 @@ class Session:
         self.obs = None
         self._diagnoses_seen: List[Any] = []
         self._actions_seen: List[Action] = []
+        # async detection plane (repro.detect): background executor +
+        # staleness of the most recently admitted batch sweep
+        self._executor = None
+        self.async_lag_steps = 0
+        self.async_lag_seconds = 0.0
+        self.sweeps_admitted = 0
+        self._last_step = 0  # newest step seen; finalize admits against it
         if self.off:
             return
         self._sinks = [sinks_mod.build_sink(s) for s in self.spec.sinks]
         self._backend = detector_backend(self.spec.detector.backend,
                                          self.spec.mode)(self.spec.detector)
+        if self.spec.detector.async_detect:
+            from repro.detect import DetectionExecutor
+
+            self._executor = DetectionExecutor(
+                mode=self.spec.detector.executor)
+            if hasattr(self._backend, "attach_executor"):
+                self._backend.attach_executor(self._executor)
         if self.spec.topology is not None:
             # node -> group -> fleet tree (repro.fleet); must precede node
             # registration AND the wire-tap below, which replaces the monitor
@@ -255,6 +269,7 @@ class Session:
         out = StepOutcome()
         if self.off or step <= 0:
             return out
+        self._last_step = max(self._last_step, step)
         det = self.spec.detector
         if self.spec.mode == "stream":
             if step % det.flush_every:
@@ -264,7 +279,13 @@ class Session:
                 return out
             n_closed = len(self._backend.closed)
             with self._detection_pause():
-                out.detections = self._backend.update()
+                if self._executor is not None:
+                    out.detections = self._backend.update_async(step)
+                    self.async_lag_steps = self._backend.lag_steps
+                    self.async_lag_seconds = self._backend.lag_seconds
+                    self.sweeps_admitted = self._backend.sweeps_admitted
+                else:
+                    out.detections = self._backend.update()
             out.incidents = self._backend.closed[n_closed:]
             if out.incidents and self._diagnoser is not None:
                 out.diagnoses = self._diagnoser.diagnose_all(
@@ -278,8 +299,12 @@ class Session:
             if not train["ts"].shape[0]:
                 return out
             with self._detection_pause():
-                self._backend.fit(train)
-                out.detections = self._backend.update(cols)
+                if self._executor is not None:
+                    out.detections = self._batch_sweep_async(step, cols,
+                                                             train)
+                else:
+                    self._backend.fit(train)
+                    out.detections = self._backend.update(cols)
         if self.governor is not None and out.detections:
             out.actions = self.governor.decide(out.detections)
         if self.governor is not None and out.diagnoses:
@@ -289,6 +314,34 @@ class Session:
         self._actions_seen.extend(out.actions)
         self._refresh_sinks()
         return out
+
+    def _batch_sweep_async(self, step: int, cols, train) -> Dict[Layer, Any]:
+        """Batch-mode async sweep: the fit+score closure runs on the
+        executor over the snapshot taken THIS cadence point; the detections
+        published now are from the most recently COMPLETED sweep (same step
+        under the inline executor, typically the previous cadence point
+        under the thread executor — staleness in ``async_lag_steps``)."""
+        backend = self._backend
+
+        def sweep():
+            backend.fit(train)
+            return backend.update(cols)
+
+        self._executor.submit("batch", sweep, step=step)
+        return self._admit_batch(step)
+
+    def _admit_batch(self, step: int) -> Dict[Layer, Any]:
+        detections: Dict[Layer, Any] = {}
+        for r in self._executor.drain():
+            if r.key != "batch":
+                continue
+            if r.error is not None:
+                raise r.error
+            detections = r.value or {}
+            self.async_lag_steps = step - r.step
+            self.async_lag_seconds = r.lag_s
+            self.sweeps_admitted += 1
+        return detections
 
     def warmup(self) -> List[Layer]:
         """Streaming: fit baselines on the (assumed clean) data so far.
@@ -306,7 +359,10 @@ class Session:
             return []
         n_closed = len(self._backend.closed)
         with self._detection_pause():
-            self._backend.update()
+            if self._executor is not None:
+                self._backend.update_async()
+            else:
+                self._backend.update()
         self._refresh_sinks()
         return self._backend.closed[n_closed:]
 
@@ -381,9 +437,15 @@ class Session:
         detections: Dict[Layer, Any] = {}
         diagnoses: List[Any] = []
         try:
+            if self._executor is not None and self.spec.mode == "batch":
+                # quiesce in-flight batch sweeps before the final
+                # synchronous refit below (their detections are superseded
+                # by it; draining only updates staleness accounting)
+                self._executor.flush()
+                self._admit_batch(step=self._last_step)
             if self.spec.mode == "stream":
                 with self._detection_pause():
-                    self._backend.finish()
+                    self._backend.finish(step=self._last_step)
                 incidents = self._backend.incidents  # ranked, all closed
                 detections = self._backend.flags()
             else:
@@ -441,10 +503,24 @@ class Session:
                 self._diagnoses_seen = list(diagnoses)
             elif not diagnoses and self._diagnoses_seen:
                 diagnoses = list(self._diagnoses_seen)
+            if self._executor is not None:
+                self._executor.close()
+                if hasattr(self._backend, "sweeps_admitted"):
+                    # stream: the backend drove admission; mirror its final
+                    # staleness accounting onto the session surface
+                    self.async_lag_steps = self._backend.lag_steps
+                    self.async_lag_seconds = self._backend.lag_seconds
+                    self.sweeps_admitted = self._backend.sweeps_admitted
             overhead = {h.node_id: h.collector.overhead_stats()
                         for h in self._nodes.values()}
             if self.spec.mode == "stream" and self._backend is not None:
                 overhead["stream"] = self._backend.monitor.stats()
+            if self._executor is not None:
+                overhead["detect_plane"] = dict(
+                    self._executor.stats(),
+                    lag_steps=self.async_lag_steps,
+                    lag_seconds=self.async_lag_seconds,
+                    sweeps_admitted=self.sweeps_admitted)
             report = MonitorReport.build(self.spec.mode, detections,
                                          incidents, overhead,
                                          sink_outputs={},

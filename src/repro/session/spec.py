@@ -68,6 +68,23 @@ class DetectorSpec:
     incident_gap_s: float = 1.0
     incident_close_after_s: float = 2.0
     min_flags: int = 8
+    # async detection plane: sweeps run on a background executor and their
+    # results are admitted at the NEXT cadence point (docs/detection.md).
+    # False = legacy synchronous sweeps on the step thread.
+    async_detect: bool = True
+    # executor mode when async: "thread" (background worker — the step
+    # thread never runs EM) or "inline" (execute at submit; deterministic,
+    # byte-identical to the synchronous path — tests and debugging)
+    executor: str = "thread"
+    # stream mode: incremental (stepwise-EM) warm refits — fold only the
+    # window rows that arrived since the last sweep into persistent
+    # sufficient statistics instead of re-running EM on a window bootstrap
+    incremental: bool = True
+
+    def __post_init__(self) -> None:
+        if self.executor not in ("thread", "inline"):
+            raise ValueError("executor must be 'thread' or 'inline', "
+                             f"got {self.executor!r}")
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "DetectorSpec":

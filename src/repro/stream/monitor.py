@@ -30,6 +30,7 @@ output into the unified `MonitorReport`.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -41,7 +42,22 @@ from repro.stream import wire
 from repro.stream.agent import NodeAgent
 from repro.stream.incidents import Incident, IncidentEngine
 from repro.stream.online import OnlineGMMDetector, WindowDetection
-from repro.stream.window import FleetAggregator
+from repro.stream.window import AggSnapshot, FleetAggregator
+
+
+@dataclasses.dataclass
+class SweepOutcome:
+    """What a detection sweep computed off-thread, pending admission.
+
+    Produced by ``detect_snapshot`` (any thread), consumed by ``admit``
+    (step thread) — the hand-off boundary of the async detection plane.
+    Everything incident-engine-facing stays out of the sweep: the engine is
+    read by reporting on the step thread and is not thread-safe."""
+
+    detections: Dict[Layer, WindowDetection]
+    fitted: List[Layer]  # layers late-warmup fitted during this sweep
+    t_latest: float  # snapshot fleet clock (floors + incident `now`)
+    detect_s: float  # sweep wall time (compute only, excludes queueing)
 
 
 def export_windows_trace(windows, path: str) -> str:
@@ -134,6 +150,41 @@ class StreamMonitor:
         dt = time.perf_counter() - t0
         self.detect_seconds += dt
         self.last_detect_ms = 1e3 * dt
+        self.ticks += 1
+        return closed
+
+    # -- async trio (poll/freeze -> detect off-thread -> admit) ---------------
+    # tick() == admit(detect_snapshot(snapshot())) when nothing ingests in
+    # between; the async plane runs the middle call on the executor worker.
+
+    def snapshot(self) -> Optional[AggSnapshot]:
+        """Step-thread half of an async tick: poll agents, freeze the
+        aggregator. Returns None before warmup (nothing to sweep)."""
+        self.poll()
+        if not self.detector.warmed:
+            return None
+        return self.aggregator.freeze()
+
+    def detect_snapshot(self, snap: AggSnapshot) -> SweepOutcome:
+        """Worker half: late-warmup + detect against a frozen snapshot.
+        Touches only detector state — safe off-thread because the executor
+        serialises sweeps per key."""
+        t0 = time.perf_counter()
+        fitted = self.detector.warmup(snap)
+        detections = self.detector.detect(snap)
+        return SweepOutcome(detections=detections, fitted=fitted,
+                            t_latest=snap.t_latest,
+                            detect_s=time.perf_counter() - t0)
+
+    def admit(self, outcome: SweepOutcome) -> List[Incident]:
+        """Step-thread half two: publish a sweep's results — late-warmup
+        floors, incident engine update, tick accounting."""
+        for layer in outcome.fitted:
+            self.engine.set_layer_floor(layer, outcome.t_latest)
+        self.last_detections = outcome.detections
+        closed = self.engine.update(outcome.detections, now=outcome.t_latest)
+        self.detect_seconds += outcome.detect_s
+        self.last_detect_ms = 1e3 * outcome.detect_s
         self.ticks += 1
         return closed
 

@@ -113,9 +113,46 @@ class LayerWindow:
         """Zero-copy views of the live rows (invalidated by mutation)."""
         return {k: col[:self.n] for k, col in self.cols.items()}
 
+    def freeze(self) -> "SnapshotWindow":
+        """Owned copy of the live rows, safe to read from another thread
+        while this window keeps mutating. The async detection plane hands
+        these to the executor — a zero-copy ``view()`` would tear the moment
+        ingest compacts or appends under it.
+
+        ``n`` is read once: `append` publishes new rows before bumping
+        ``n``, so a single read yields a consistent prefix even if an append
+        races this copy (compaction still requires freeze and ingest to
+        share a thread, which the session's step loop guarantees)."""
+        n = self.n
+        return SnapshotWindow(self.layer,
+                              {k: col[:n].copy()
+                               for k, col in self.cols.items()})
+
     @property
     def t_newest(self) -> float:
         return float(self.cols["ts"][:self.n].max()) if self.n else 0.0
+
+
+class SnapshotWindow:
+    """Immutable point-in-time copy of a LayerWindow (duck-compatible with
+    the read surface the detector uses: layer / __len__ / view())."""
+
+    __slots__ = ("layer", "cols", "n")
+
+    def __init__(self, layer: Layer, cols: Dict[str, np.ndarray]):
+        self.layer = layer
+        self.cols = cols
+        self.n = int(cols["ts"].shape[0]) if cols else 0
+
+    def __len__(self) -> int:
+        return self.n
+
+    def view(self) -> Dict[str, np.ndarray]:
+        return self.cols
+
+    @property
+    def t_newest(self) -> float:
+        return float(self.cols["ts"].max()) if self.n else 0.0
 
 
 class FleetAggregator:
@@ -198,6 +235,17 @@ class FleetAggregator:
     def window(self, layer: Layer) -> LayerWindow:
         return self.windows[layer]
 
+    def freeze(self) -> "AggSnapshot":
+        """Owned point-in-time copy of every layer window + the clock/
+        membership facts detection publishing needs (duck-compatible with
+        the aggregator surface `OnlineGMMDetector` reads). Taken on the
+        ingest thread; read on the detection executor's worker."""
+        return AggSnapshot(
+            windows={layer: w.freeze() for layer, w in self.windows.items()},
+            t_latest=self.t_latest,
+            nodes_seen=dict(self.nodes_seen),
+            node_last_ts=dict(self.node_last_ts))
+
     def stats(self) -> Dict[str, object]:
         return {
             "nodes": len(self.nodes_seen),
@@ -213,3 +261,19 @@ class FleetAggregator:
                              if len(w)},
             "t_latest": self.t_latest,
         }
+
+
+class AggSnapshot:
+    """Frozen FleetAggregator read surface for off-thread detection."""
+
+    __slots__ = ("windows", "t_latest", "nodes_seen", "node_last_ts")
+
+    def __init__(self, windows: Dict[Layer, SnapshotWindow], t_latest: float,
+                 nodes_seen: Dict[int, int], node_last_ts: Dict[int, float]):
+        self.windows = windows
+        self.t_latest = t_latest
+        self.nodes_seen = nodes_seen
+        self.node_last_ts = node_last_ts
+
+    def window(self, layer: Layer) -> SnapshotWindow:
+        return self.windows[layer]

@@ -183,6 +183,9 @@ def event_counter(monkeypatch):
 
 
 def _probe_spec(mode, **det):
+    # inline executor: sweeps publish at the same step that snapshotted
+    # them, so the short run below sees its detections deterministically
+    det.setdefault("executor", "inline")
     return MonitorSpec(
         mode=mode, probes=["xla", "operator", "collective", "device", "step"],
         probe_options={"device": {"interval": 0.02}},

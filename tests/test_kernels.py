@@ -5,9 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.gmm_score import gmm_best_pallas, gmm_score_pallas
-from repro.kernels.gmm_stats import gmm_stats_pallas
+from repro.kernels.gmm_stats import gmm_stats_pallas, gmm_update_pallas
 
 
 def make_params(N, D, K, dtype, seed=0):
@@ -73,6 +73,86 @@ def test_gmm_stats_matches_ref(N, D, K):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                    rtol=1e-4, atol=1e-4 * scale,
                                    err_msg=name)
+
+
+def _assert_tuple_close(got, want, names, rtol=1e-4, atol=1e-4):
+    for g, w, name in zip(got, want, names):
+        scale = max(float(jnp.max(jnp.abs(w))) if jnp.size(w) else 0.0, 1.0)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=rtol, atol=atol * scale,
+                                   err_msg=name)
+
+
+# includes K=1 (degenerate mixture) and non-power-of-two N
+UPDATE_SHAPES = [(256, 2, 2), (1000, 4, 3), (777, 3, 5), (512, 8, 1),
+                 (64, 5, 1)]
+
+
+@pytest.mark.parametrize("N,D,K", UPDATE_SHAPES)
+def test_gmm_update_matches_ref(N, D, K):
+    """Fused E+M kernel returns the same (nk, means', cov', ll) as the
+    oracle — one EM iteration in one pass."""
+    X, means, U = make_params(N, D, K, jnp.float32, seed=4)
+    logw = jnp.log(jnp.full((K,), 1.0 / K))
+    want = ref.gmm_update_ref(X, logw, means, U)
+    got = gmm_update_pallas(X, logw, means, U, block_n=256, interpret=True)
+    _assert_tuple_close(got, want, ["nk", "means", "cov", "ll"])
+
+
+# bucket shapes the detection plane actually launches (pad_to_bucket pads N
+# to a power of two >= 256 and passes the true row count as nvalid)
+BUCKETS = [(256, 4, 3), (512, 8, 1), (1024, 2, 4)]
+
+
+@pytest.mark.parametrize("N,D,K", BUCKETS)
+@pytest.mark.parametrize("frac", [1.0, 0.61, 0.25])
+@pytest.mark.parametrize("op", ["stats", "update"])
+def test_nvalid_masks_padding(N, D, K, frac, op):
+    """Padded launch with a traced nvalid row count equals the oracle on the
+    true rows alone — padding rows are poisoned to prove they are masked."""
+    nvalid = max(int(N * frac), 1)
+    X, means, U = make_params(N, D, K, jnp.float32, seed=5)
+    X = X.at[nvalid:].set(1e6)  # any leak through the mask is unmissable
+    logw = jnp.log(jnp.full((K,), 1.0 / K))
+    if op == "stats":
+        want = ref.gmm_stats_ref(X[:nvalid], logw, means, U)
+        got = gmm_stats_pallas(X, logw, means, U, nvalid=nvalid,
+                               block_n=128, interpret=True)
+        names = ["nk", "sx", "sxx", "ll"]
+    else:
+        want = ref.gmm_update_ref(X[:nvalid], logw, means, U)
+        got = gmm_update_pallas(X, logw, means, U, nvalid=nvalid,
+                                block_n=128, interpret=True)
+        names = ["nk", "means", "cov", "ll"]
+    _assert_tuple_close(got, want, names)
+
+
+@pytest.mark.parametrize("op", ["stats", "update"])
+def test_nvalid_zero_rows(op):
+    """nvalid=0 (an empty window padded to a full bucket) contributes
+    nothing: zero masses, zero moments, zero log-likelihood."""
+    X, means, U = make_params(256, 4, 3, jnp.float32, seed=6)
+    logw = jnp.log(jnp.full((3,), 1.0 / 3))
+    fn = gmm_stats_pallas if op == "stats" else gmm_update_pallas
+    out = fn(X, logw, means, U, nvalid=0, block_n=128, interpret=True)
+    nk, ll = out[0], out[3]
+    np.testing.assert_allclose(np.asarray(nk), 0.0, atol=1e-12)
+    np.testing.assert_allclose(float(ll), 0.0, atol=1e-12)
+    if op == "update":
+        # denominators are regularised, so means/cov stay finite at nk=0
+        assert np.isfinite(np.asarray(out[1])).all()
+        assert np.isfinite(np.asarray(out[2])).all()
+
+
+def test_ops_dispatch_nvalid_backend_parity():
+    """ops.gmm_update masks identically through both backends — the
+    detection plane may run either depending on the host."""
+    X, means, U = make_params(512, 6, 4, jnp.float32, seed=7)
+    logw = jnp.log(jnp.full((4,), 1.0 / 4))
+    pall = ops.gmm_update(X, logw, means, U, nvalid=300, backend="pallas",
+                          block_n=256)
+    jnpb = ops.gmm_update(X, logw, means, U, nvalid=300, backend="jnp")
+    _assert_tuple_close(pall, jnpb, ["nk", "means", "cov", "ll"])
 
 
 def test_stats_feed_m_step():

@@ -317,8 +317,10 @@ def test_session_batch_end_to_end(tmp_path):
         mode="batch",
         probes=["xla", "operator", "collective", "device", "step"],
         probe_options={"device": {"interval": 0.01}},
+        # inline executor: sweeps publish the same step they snapshot, so
+        # the mid-run saw_detections assert is deterministic
         detector=DetectorSpec(min_events=16, sweep_every=20,
-                              holdoff_steps=5),
+                              holdoff_steps=5, executor="inline"),
         sinks=[SinkSpec("perfetto", str(trace)),
                SinkSpec("wire", str(wire_path)),
                SinkSpec("report", str(report_path))])

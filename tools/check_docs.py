@@ -24,6 +24,11 @@ Two families of checks, both run by CI and by tests/test_docs.py:
   every supported wire version (``v1``/``v2``/``v3``, from
   `repro.stream.wire.SUPPORTED_VERSIONS`) plus the named version-mismatch
   error — the scale-out reference must track the topology schema.
+* **detection**: docs/detection.md must document every public name in
+  `repro.detect.__all__`, every executor mode, the detection-plane spec
+  knobs (`async_detect` / `executor` / `incremental`), and every
+  `eacgm_detect_*` self-metric family — the async-plane contract must
+  track the code that implements it.
 
 Exit code 0 = clean; 1 = problems (printed one per line).
 """
@@ -214,10 +219,46 @@ def check_fleet() -> List[str]:
     return problems
 
 
+def check_detection() -> List[str]:
+    """Async detection plane coverage: every public `repro.detect` name,
+    both executor modes, the three detection-plane spec knobs, and every
+    `eacgm_detect_*` metric family must appear in docs/detection.md (drift
+    gate: a new plane knob or detect metric without docs fails CI)."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    import repro.detect as detect
+    from repro.obs import METRIC_NAMES
+
+    path = os.path.join(REPO, "docs", "detection.md")
+    rel = os.path.relpath(path, REPO)
+    if not os.path.exists(path):
+        return [f"{rel}: missing (the async-detection reference is "
+                "required)"]
+    text = open(path).read()
+    problems = []
+    for name in detect.__all__:
+        if name not in text:
+            problems.append(
+                f"{rel}: public repro.detect name `{name}` is undocumented")
+    for mode in ("thread", "inline"):
+        if f'"{mode}"' not in text and f"`{mode}`" not in text:
+            problems.append(
+                f"{rel}: executor mode `{mode}` is undocumented")
+    for knob in ("async_detect", "executor", "incremental"):
+        if f"`{knob}" not in text and f"`detector.{knob}" not in text:
+            problems.append(
+                f"{rel}: detector spec knob `{knob}` is undocumented")
+    for name in METRIC_NAMES:
+        if name.startswith("eacgm_detect_") and name not in text:
+            problems.append(
+                f"{rel}: detect self-metric `{name}` is undocumented")
+    return problems
+
+
 def main() -> int:
     files = doc_files()
     problems = (check_links(files) + check_spec_reference()
-                + check_runbook() + check_observability() + check_fleet())
+                + check_runbook() + check_observability() + check_fleet()
+                + check_detection())
     for p in problems:
         print(p)
     print(f"checked {len(files)} file(s): "
