@@ -1,0 +1,240 @@
+"""Serve-plane benchmark: continuous batching vs the fixed-batch engine.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench
+    PYTHONPATH=src python -m benchmarks.serve_bench --check-baseline
+
+Runs the SAME request mix (variable prompt lengths and generation budgets,
+drawn from a seeded rng) through both serving paths at equal slot count:
+
+* **fixed batch** — FCFS groups of ``slots`` requests through
+  `ServeEngine.generate`; every group pads prompts to its longest and
+  decodes to its largest budget, so short requests wait for the batch
+  convoy to finish.
+* **continuous** — the same requests backlogged into a `RequestQueue` and
+  drained through `ContinuousBatchingEngine`, where a finishing request
+  frees its slot to the next one mid-flight.
+
+Both paths run the same jitted decode math on the same host; the measured
+gap is scheduling, not kernels. Reported per path: wall time, useful
+tokens/sec (each request's own budget — convoy over-decode is excluded),
+requests/sec; the continuous path adds queue-wait/TTFT/TPOT percentiles
+(real wall clock here — the deterministic-latency twin lives in the
+`VirtualClock` eval scenarios) and mean slot occupancy.
+
+``--check-baseline`` compares against the committed
+``results/bench/serve_bench.json``: timing keys are warn-only (runner
+hardware drifts), but ``speedup_tokens_per_s`` >= 1 is a HARD gate — the
+continuous engine beating fixed batch at equal slots is the subsystem's
+reason to exist, not a tuning detail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, save_result
+from repro.config import get_arch, reduced
+from repro.models.model import Runtime, init_params
+from repro.serve import (ContinuousBatchingEngine, Request, RequestQueue,
+                         ServeEngine)
+
+# warn when a timing key regresses by more than this vs the baseline,
+# plus an absolute allowance for host-scheduler noise
+REGRESSION_TOLERANCE = 0.30
+REGRESSION_ABS = {"continuous_tokens_per_s": -0.0,  # rate: lower is worse
+                  "continuous_ttft_p95_s": 0.05,    # latency: higher is worse
+                  "continuous_tpot_p50_s": 0.01}
+
+
+def _workload(n_requests: int, seed: int, vocab: int,
+              prompt_len=(4, 24), max_new=(4, 32)) -> List[Request]:
+    """A seeded request mix with enough budget spread that batch convoys
+    cost real throughput (the regime continuous batching exists for)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_requests):
+        plen = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+        prompt = rng.integers(1, vocab, size=plen,
+                              dtype=np.int64).astype(np.int32)
+        out.append(Request(
+            req_id=i, tenant=int(rng.integers(0, 3)), prompt=prompt,
+            max_new_tokens=int(rng.integers(max_new[0], max_new[1] + 1)),
+            enqueue_ts=0.0))
+    return out
+
+
+def _clone(reqs: List[Request]) -> List[Request]:
+    return [Request(req_id=r.req_id, tenant=r.tenant, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, enqueue_ts=0.0)
+            for r in reqs]
+
+
+def run_fixed(cfg, rt, params, reqs: List[Request], slots: int,
+              max_len: int, seed: int) -> Dict[str, float]:
+    """FCFS groups of ``slots`` through the fixed-batch engine: pad to the
+    group's longest prompt, decode to its largest budget (the convoy)."""
+    eng = ServeEngine(cfg=cfg, rt=rt, params=params, batch_size=slots,
+                      max_len=max_len, seed=seed)
+    groups = [reqs[i:i + slots] for i in range(0, len(reqs), slots)]
+    # compile outside the timed region
+    eng.generate(np.ones((slots, 2), np.int32), 2)
+    tokens = 0
+    t0 = time.perf_counter()
+    for g in groups:
+        max_p = max(r.prompt_len for r in g)
+        max_n = max(r.max_new_tokens for r in g)
+        prompts = np.ones((slots, max_p), np.int32)
+        for lane, r in enumerate(g):
+            prompts[lane, :r.prompt_len] = r.prompt
+        eng.generate(prompts, max_n)
+        tokens += sum(r.max_new_tokens for r in g)
+    wall = time.perf_counter() - t0
+    return {"fixed_wall_s": wall, "fixed_tokens": tokens,
+            "fixed_tokens_per_s": tokens / wall,
+            "fixed_requests_per_s": len(reqs) / wall}
+
+
+def run_continuous(cfg, rt, params, reqs: List[Request], slots: int,
+                   max_len: int, seed: int) -> Dict[str, float]:
+    """The same backlog drained through the continuous engine."""
+    eng = ContinuousBatchingEngine(cfg, rt, params, slots=slots,
+                                   max_len=max_len, seed=seed)
+    warm = RequestQueue()
+    for r in _clone(reqs[:slots]):
+        warm.push(r)
+    s = 0
+    while len(warm) or eng.n_active:  # compile outside the timed region
+        eng.tick(s, None, warm, None)
+        s += 1
+    eng.reset()
+    queue = RequestQueue()
+    base = time.perf_counter()
+    for r in reqs:
+        r.enqueue_ts = base  # closed loop: the full backlog waits at t=0
+        queue.push(r)
+    s = 0
+    t0 = time.perf_counter()
+    while len(queue) or eng.n_active:
+        eng.tick(s, None, queue, None)
+        s += 1
+    wall = time.perf_counter() - t0
+    fin = eng.finished
+    tokens = sum(r.tokens_out for r in fin)
+    waits = np.array([r.queue_wait for r in fin])
+    ttfts = np.array([r.ttft for r in fin])
+    tpots = np.array([r.tpot for r in fin if r.tokens_out > 1])
+    return {"continuous_wall_s": wall, "continuous_tokens": tokens,
+            "continuous_tokens_per_s": tokens / wall,
+            "continuous_requests_per_s": len(fin) / wall,
+            "continuous_steps": eng.decode_steps,
+            "continuous_occupancy": eng.mean_occupancy,
+            "continuous_wait_p50_s": float(np.median(waits)),
+            "continuous_ttft_p50_s": float(np.median(ttfts)),
+            "continuous_ttft_p95_s": float(np.quantile(ttfts, 0.95)),
+            "continuous_tpot_p50_s": float(np.median(tpots))
+            if len(tpots) else 0.0}
+
+
+def run(n_requests: int = 48, slots: int = 4, seed: int = 0,
+        arch: str = "gpt2", save: bool = True) -> Dict[str, object]:
+    cfg = reduced(get_arch(arch))
+    rt = Runtime(mesh=None, compute_dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    reqs = _workload(n_requests, seed, cfg.vocab_size)
+    max_len = 24 * (1 + 32) + 64  # worst-case epoch budget for the mix
+    out: Dict[str, object] = {"n_requests": n_requests, "slots": slots,
+                              "arch": cfg.name}
+    out.update(run_fixed(cfg, rt, params, _clone(reqs), slots, max_len, seed))
+    out.update(run_continuous(cfg, rt, params, _clone(reqs), slots, max_len,
+                              seed))
+    out["speedup_tokens_per_s"] = (out["continuous_tokens_per_s"]
+                                   / out["fixed_tokens_per_s"])
+    if save:
+        save_result("serve_bench", out)
+    return out
+
+
+def check_baseline(fresh: Dict[str, object],
+                   path: Optional[str] = None) -> Dict[str, int]:
+    """Regression gate vs the committed baseline JSON. Timing keys warn
+    only; the continuous-vs-fixed speedup is a HARD gate at 1.0 — losing to
+    the convoy at equal slots means the scheduler is broken. Returns
+    {"warnings": n, "failures": n}."""
+    warnings = failures = 0
+    speedup = fresh.get("speedup_tokens_per_s", 0.0)
+    if speedup < 1.0:
+        print(f"::error title=serve_bench::continuous batching is SLOWER "
+              f"than fixed batch at equal slots (speedup {speedup:.2f}x; "
+              "HARD gate >= 1.0)")
+        failures += 1
+    else:
+        print(f"[bench-gate] speedup_tokens_per_s: {speedup:.2f}x "
+              f"(>= 1.0) OK [hard gate]")
+    path = path or os.path.join(RESULTS_DIR, "serve_bench.json")
+    if not os.path.exists(path):
+        print(f"[bench-gate] no baseline at {path}; skipping comparison")
+        return {"warnings": warnings, "failures": failures}
+    with open(path) as f:
+        base = json.load(f)
+    for key, abs_tol in REGRESSION_ABS.items():
+        ref, got = base.get(key), fresh.get(key)
+        if ref is None or got is None:
+            continue
+        if key.endswith("_per_s"):  # rate: regression = lower
+            bad = got < ref * (1 - REGRESSION_TOLERANCE)
+            detail = f"{got:,.0f} vs committed {ref:,.0f} tok/s"
+        else:  # latency: regression = higher
+            bad = got > ref * (1 + REGRESSION_TOLERANCE) + abs_tol
+            detail = f"{got:.3f}s vs committed {ref:.3f}s"
+        if bad:
+            print(f"::warning title=serve_bench regression::{key} {detail}")
+            warnings += 1
+        else:
+            print(f"[bench-gate] {key}: {detail} OK")
+    return {"warnings": warnings, "failures": failures}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arch", default="gpt2")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="compare against the committed baseline JSON "
+                         "instead of overwriting it (speedup >= 1 is a hard "
+                         "gate, timing keys warn only)")
+    args = ap.parse_args()
+    out = run(n_requests=args.requests, slots=args.slots, seed=args.seed,
+              arch=args.arch, save=not args.check_baseline)
+    print(f"workload:    {out['n_requests']} requests x {out['slots']} slots "
+          f"({out['arch']})")
+    print(f"fixed batch: {out['fixed_tokens_per_s']:8.1f} tok/s "
+          f"{out['fixed_requests_per_s']:6.1f} req/s "
+          f"({out['fixed_wall_s']:.2f}s)")
+    print(f"continuous:  {out['continuous_tokens_per_s']:8.1f} tok/s "
+          f"{out['continuous_requests_per_s']:6.1f} req/s "
+          f"({out['continuous_wall_s']:.2f}s, "
+          f"occupancy {100 * out['continuous_occupancy']:.0f}%)")
+    print(f"latency:     wait p50 {out['continuous_wait_p50_s']:.3f}s  "
+          f"ttft p50/p95 {out['continuous_ttft_p50_s']:.3f}/"
+          f"{out['continuous_ttft_p95_s']:.3f}s  "
+          f"tpot p50 {out['continuous_tpot_p50_s']:.4f}s")
+    print(f"speedup:     {out['speedup_tokens_per_s']:.2f}x tokens/s "
+          "(continuous / fixed, equal slots)")
+    if args.check_baseline:
+        outcome = check_baseline(out)
+        save_result("serve_bench_ci", out)
+        if outcome["failures"]:
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -60,13 +60,25 @@ class Fault:
 LATENCY_KINDS = ("python_latency", "op_latency", "xla_latency")
 DEVICE_KINDS = ("hw_contention", "mem_leak")
 NETWORK_KINDS = ("net_latency", "packet_loss")
-ALL_KINDS = LATENCY_KINDS + DEVICE_KINDS + NETWORK_KINDS
+# request-plane kinds perturb the serve LOAD GENERATOR (the arrival mix),
+# not a probe: the request plane is the layer under test, so the fault is in
+# the traffic itself (see repro.serve.request.LoadGenerator.arrivals):
+#
+# * ``tenant_flood``      — one tenant's arrival rate multiplied.
+#                           magnitude: rate multiplier (>= 1 floods).
+# * ``heavy_prompt_skew`` — prompt lengths multiplied while active.
+#                           magnitude: length multiplier (>= 1 skews).
+# * ``slow_client_stall`` — new requests' clients stall token delivery.
+#                           magnitude: seconds of stall per delivered token.
+SERVE_KINDS = ("tenant_flood", "heavy_prompt_skew", "slow_client_stall")
+ALL_KINDS = LATENCY_KINDS + DEVICE_KINDS + NETWORK_KINDS + SERVE_KINDS
 
 # per-kind default magnitudes, in each kind's own unit (module docstring)
 DEFAULT_MAGNITUDES = {"op_latency": 0.05, "xla_latency": 0.03,
                       "python_latency": 0.04, "hw_contention": 0.5,
                       "mem_leak": 0.25, "net_latency": 4.0,
-                      "packet_loss": 0.3}
+                      "packet_loss": 0.3, "tenant_flood": 8.0,
+                      "heavy_prompt_skew": 4.0, "slow_client_stall": 0.08}
 
 
 class FaultInjector:
@@ -165,6 +177,18 @@ class FaultInjector:
             dev.mem_leak_gb = leak
         return active
 
+    def serve_faults(self, step: int) -> Dict[str, float]:
+        """Active request-plane perturbations for this step, as the
+        ``{kind: magnitude}`` dict the serve load generator consumes
+        (`LoadGenerator.arrivals`). Magnitudes are NOT jittered here — the
+        arrival process itself is stochastic, and the fault windows are the
+        ground truth the SLO evaluation scores against."""
+        out: Dict[str, float] = {}
+        for f in self.faults:
+            if f.kind in SERVE_KINDS and f.active(step):
+                out[f.kind] = max(out.get(f.kind, 0.0), f.magnitude)
+        return out
+
     def clear(self, collector) -> None:
         collector["step"].extra_latency = 0.0
         collector["step"].extra_op = 0.0
@@ -196,7 +220,7 @@ class Scenario:
     name: str
     description: str
     kinds: Tuple[str, ...]  # empty = clean control (no faults)
-    workload: str = "train"  # train | serve
+    workload: str = "train"  # train | serve | request
     expected_layers: Tuple[str, ...] = ()  # layer values expected to flag
     clean_fraction: float = 0.4
     n_bursts: int = 3
@@ -297,9 +321,31 @@ BUILTIN_SCENARIOS = [
              "device contention while serving",
              kinds=("hw_contention",), workload="serve",
              expected_layers=("device",)),
+    # request-plane scenarios: the continuous-batching engine under a
+    # deterministic multi-tenant load, judged by the SLO monitor (breach
+    # incidents, kind="slo_breach") instead of the GMM detectors. Longer
+    # bursts than the probe scenarios: queue pressure takes tens of steps
+    # to build and drain, and the breach evidence trails the window.
+    Scenario("serve_clean_control",
+             "request plane under nominal load — the SLO false-alarm floor",
+             kinds=(), workload="request"),
+    Scenario("serve_tenant_flood",
+             "one tenant floods admission; queue waits breach the SLO",
+             kinds=("tenant_flood",), workload="request",
+             expected_layers=("request",), n_bursts=2, burst_fraction=0.12),
+    Scenario("serve_heavy_prompts",
+             "oversized prompts monopolise prefill; TTFT breaches the SLO",
+             kinds=("heavy_prompt_skew",), workload="request",
+             expected_layers=("request",), n_bursts=2, burst_fraction=0.12),
+    Scenario("serve_slow_clients",
+             "clients stall token delivery; TPOT breaches the SLO",
+             kinds=("slow_client_stall",), workload="request",
+             expected_layers=("request",), n_bursts=2, burst_fraction=0.12),
 ]
 for _s in BUILTIN_SCENARIOS:
     register_scenario(_s)
 
 # the CI subset: fast, covers clean + a latency and a network fault
 SMOKE_SCENARIOS = ("clean_control", "latency_spike", "comm_slowdown")
+# the request-plane CI subset: the SLO clean floor + one breach scenario
+SERVE_SMOKE_SCENARIOS = ("serve_clean_control", "serve_tenant_flood")

@@ -34,6 +34,7 @@ class Layer(str, enum.Enum):
     COLLECTIVE = "collective"
     DEVICE = "device"
     STEP = "step"
+    REQUEST = "request"  # serve plane: per-request lifecycle records
 
 
 # Layer enum <-> wire code (int8). Order is the Layer declaration order and

@@ -113,6 +113,19 @@ BUILTIN_POLICIES = [
            "retransmit inflation on a subset of messages: suspect a flaky "
            "NIC/link, replace the path",
            runbook="packetloss-packet-loss"),
+    # request-plane kinds (SLO-breach incidents, repro.serve)
+    Policy("tenant_flood", "serve-queue", "throttle",
+           "one tenant's arrival rate is starving the admission queue: "
+           "rate-limit that tenant at admission until the backlog drains",
+           runbook="tenantflood-tenant-admission-flood"),
+    Policy("heavy_prompt_skew", "serve-prefill", "reroute",
+           "oversized prompts are monopolising prefill and inflating TTFT: "
+           "route long-prompt requests to a dedicated prefill pool",
+           runbook="heavypromptskew-heavy-prompt-skew"),
+    Policy("slow_client_stall", "serve-client", "alert",
+           "token delivery is stalling on slow clients, not on compute: "
+           "enable client-side backpressure/timeouts before evicting",
+           runbook="slowclientstall-slow-client-stall"),
 ]
 for _p in BUILTIN_POLICIES:
     register_policy(_p)
@@ -129,6 +142,10 @@ LAYER_DEFAULT_KIND: Dict[Layer, str] = {
     Layer.XLA: "xla_latency",
     Layer.COLLECTIVE: "net_latency",
     Layer.DEVICE: "hw_contention",
+    # request rows are SLO-thresholded, not GMM-modelled, so this default is
+    # only reachable through the legacy rate path; queue pressure is the
+    # dominant request-plane failure mode
+    Layer.REQUEST: "tenant_flood",
 }
 
 

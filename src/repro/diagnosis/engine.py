@@ -52,6 +52,10 @@ FAULT_FAMILY = {
     "mem_leak": "mem-leak",
     "net_latency": "comm-slowdown",
     "packet_loss": "packet-loss",
+    # request-plane kinds (SLO-breach incidents, repro.serve)
+    "tenant_flood": "serve-flood",
+    "heavy_prompt_skew": "serve-skew",
+    "slow_client_stall": "serve-stall",
 }
 
 # per-layer evidence columns (matching LayerWindow.view() / wire schema)
@@ -241,6 +245,135 @@ class Diagnoser:
             if d is not None:
                 out.append(d)
         return out
+
+    def diagnose_slo(self, incident: Incident,
+                     rows: Optional[Dict[str, np.ndarray]] = None,
+                     spec=None) -> Optional[Diagnosis]:
+        """Attribute one request-plane SLO-breach incident.
+
+        ``rows`` is the SLO monitor's row history within the incident span
+        (`SLOMonitor.evidence_for`): every judged request metric, breached
+        or not. This path deliberately bypasses the ``min_mean_deficit``
+        gate — SLO deficits measure relative target excess, not GMM density
+        shortfall, and a breach incident is by construction not detector
+        calibration noise. The three request-plane kinds separate on
+
+        * **tenant_flood** — queue-dominated breaches (queue wait explains
+          the TTFT excess) concentrated on one tenant,
+        * **heavy_prompt_skew** — TTFT-dominated breaches whose prompts are
+          much larger than the run's reference prompt size,
+        * **slow_client_stall** — per-token (TPOT/client-stall) breaches.
+        """
+        if incident.kind != "slo_breach":
+            return None
+        names = None if rows is None else rows.get("name")
+        if names is None or not len(names):
+            return None
+        flagged = rows["flagged"]
+        if not flagged.any():
+            return None
+        f_names = names[flagged]
+        n_b = len(f_names)
+
+        def share(*metrics):
+            return float(sum((f_names == m).sum() for m in metrics)) / n_b
+
+        b_queue = share("serve/queue_wait", "serve/queue_depth")
+        b_ttft = share("serve/ttft")
+        b_rate = share("serve/tpot", "serve/client_stall")
+        # does queue wait explain the TTFT excess? (TTFT includes the wait)
+        qw = rows["value"][names == "serve/queue_wait"]
+        tf = rows["value"][(names == "serve/ttft") & flagged]
+        wait_frac = 0.0
+        if len(qw) and len(tf):
+            wait_frac = float(np.clip(
+                np.median(qw) / max(float(np.median(tf)), 1e-9), 0.0, 1.0))
+        # prompt-size signal: heavy prompts are a *subset* of the breaching
+        # requests (normal-size requests stuck behind them breach too), so
+        # compare the upper quantile of breaching prompt sizes against the
+        # run's *global* running reference — the incident span itself is
+        # contaminated by the fault, so span-local references are useless
+        ttft_rows = names == "serve/ttft"
+        f_sizes = rows["size"][ttft_rows & flagged]
+        ref_size = float(rows.get("ref_prompt_size", 0.0) or 0.0)
+        size_ratio = (float(np.quantile(f_sizes, 0.75)) / ref_size
+                      if len(f_sizes) and ref_size > 0 else 1.0)
+        size_sig = max(0.0, size_ratio - 1.0)
+        # tenant concentration among tenant-attributed breaches (queue
+        # samples carry tenant -1 and are excluded) — as a *lift* over that
+        # tenant's share of the run's global arrival mix, so a tenant that
+        # naturally dominates the mix does not read as a flood
+        tenants = rows["tenant"][flagged]
+        tenants = tenants[tenants >= 0]
+        ref_share = rows.get("ref_tenant_share") or {}
+        conc, lift, top_tenant = 0.0, 1.0, None
+        if len(tenants):
+            ids, counts = np.unique(tenants, return_counts=True)
+            conc = float(counts.max()) / float(counts.sum())
+            top_tenant = int(ids[np.argmax(counts)])
+            base_share = float(ref_share.get(top_tenant, conc))
+            lift = conc / max(base_share, 1e-9)
+        flood_sig = float(np.clip(lift - 1.0, 0.0, 1.0))
+        stall_rows = bool((f_names == "serve/client_stall").any())
+        scores = {
+            "tenant_flood": (b_queue + b_ttft * wait_frac)
+            * (0.25 + 0.75 * conc) * (0.5 + flood_sig)
+            * (0.5 if size_sig >= 1.0 else 1.0),
+            "heavy_prompt_skew": (b_ttft + 0.5 * b_queue)
+            * min(size_sig, 2.0),
+            "slow_client_stall": 2.0 * b_rate + (1.0 if stall_rows else 0.0),
+        }
+        total = sum(scores.values())
+        if total <= 0:
+            return None
+        norm = {k: v / total for k, v in scores.items() if v > 0}
+        kind = max(norm, key=norm.get)
+        detail = {
+            "breach_share_queue": round(b_queue, 3),
+            "breach_share_ttft": round(b_ttft, 3),
+            "breach_share_rate": round(b_rate, 3),
+            "wait_frac_of_ttft": round(wait_frac, 3),
+            "prompt_size_ratio": round(size_ratio, 2),
+            "tenant_concentration": round(conc, 3),
+            "tenant_lift": round(lift, 2),
+        }
+        if top_tenant is not None:
+            detail["top_tenant"] = top_tenant
+        diag = Diagnosis(
+            incident_id=incident.incident_id,
+            fault_kind=kind,
+            family=FAULT_FAMILY.get(kind, "unknown"),
+            confidence=float(min(1.0, norm[kind])),
+            severity=float(1.0 - math.exp(
+                -incident.severity / self.severity_scale)),
+            blamed_nodes=[n for n in incident.suspect_nodes if n >= 0],
+            causal_chain=self._slo_chain(rows),
+            action=None,
+            steps=list(incident.steps),
+            t_start=incident.t_start, t_end=incident.t_end,
+            candidates={k: round(v, 4) for k, v in sorted(
+                norm.items(), key=lambda kv: -kv[1])},
+            evidence=detail)
+        diag.action = self.governor.act(diag)
+        return diag
+
+    def _slo_chain(self, rows: Dict[str, np.ndarray]) -> List[ChainLink]:
+        """Breach ordering across request metrics (queue wait breaching
+        before TTFT before TPOT is the flood signature, etc.)."""
+        names, flagged = rows["name"], rows["flagged"]
+        ts, ratio = rows["ts"], rows["ratio"]
+        total = float(np.maximum(ratio[flagged] - 1.0, 0.0).sum()) or 1.0
+        links = []
+        for metric in np.unique(names[flagged]):
+            on = flagged & (names == metric)
+            deficit = float(np.maximum(ratio[on] - 1.0, 0.0).sum())
+            links.append((float(ts[on].min()), str(metric), deficit))
+        links.sort()
+        t0 = links[0][0] if links else 0.0
+        return [ChainLink(layer=metric, t_first=t, lag_s=float(t - t0),
+                          deficit=round(deficit, 2),
+                          share=float(deficit / total))
+                for t, metric, deficit in links]
 
     # -- attribution ----------------------------------------------------------
     def _candidate_scores(self, inc: Incident, evidence: Evidence):

@@ -99,6 +99,8 @@ def _row(run) -> Dict[str, object]:
         "kinds": [d.fault_kind for d in run.report.diagnoses],
         "actions": [d.action.kind for d in run.report.diagnoses],
         **dm.to_json()}
+    if run.scenario.workload == "request":
+        row["slo"] = run.slo_metrics().to_json()
     return row
 
 
@@ -117,6 +119,23 @@ def clean_control_diagnoses(matrix: Dict[str, object]) -> Optional[int]:
     counts = [r["diagnosis"]["diagnoses_total"] for r in matrix["rows"]
               if r["scenario"] == "clean_control" and "diagnosis" in r]
     return sum(counts) if counts else None
+
+
+def serve_clean_breaches(matrix: Dict[str, object]) -> Optional[int]:
+    """Total SLO-breach incidents on the serve clean control across
+    modes — the request-plane no-false-page gate holds this at zero (None
+    when the scenario was not part of the matrix)."""
+    counts = [r["slo"]["incidents_total"] for r in matrix["rows"]
+              if r["scenario"] == "serve_clean_control" and "slo" in r]
+    return sum(counts) if counts else None
+
+
+def serve_breach_recall(matrix: Dict[str, object]) -> Optional[float]:
+    """Mean breach-incident recall over the FAULTED serve cells (None when
+    none is present): did every serve fault window raise an incident?"""
+    recalls = [r["slo"]["recall"] for r in matrix["rows"]
+               if "slo" in r and r["slo"]["windows_total"] > 0]
+    return float(sum(recalls) / len(recalls)) if recalls else None
 
 
 def mean_kind_accuracy(matrix: Dict[str, object]) -> Optional[float]:
@@ -188,6 +207,14 @@ def render_leaderboard(matrix: Dict[str, object]) -> str:
     if acc is not None:
         lines += [f"Mean blamed-kind accuracy over faulted cells: "
                   f"{100 * acc:.1f}%"]
+    n_breach = serve_clean_breaches(matrix)
+    if n_breach is not None:
+        verdict = "PASS" if n_breach == 0 else "FAIL"
+        lines += [f"Serve clean-control SLO-breach incidents: {n_breach} "
+                  f"(must be 0) — **{verdict}**"]
+    br = serve_breach_recall(matrix)
+    if br is not None:
+        lines += [f"Serve fault-window breach recall: {100 * br:.1f}%"]
     return "\n".join(lines) + "\n"
 
 

@@ -166,6 +166,61 @@ def detection_metrics(pred: np.ndarray, labels: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# SLO-breach scoring (request-plane incidents vs serve fault windows)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SLOBreachMetrics:
+    """SLO-breach incidents scored against serve-path fault windows.
+
+    Only incidents stamped ``kind == "slo_breach"`` count — the request
+    plane is thresholded, not density-modelled, so its quality question is
+    different from detection: did each serve fault window raise a breach
+    incident (recall), and did the *clean* control raise none
+    (``incidents_total == 0`` when ``windows_total == 0``)?
+    """
+
+    incidents_total: int
+    windows_total: int
+    windows_detected: int
+    spurious: int  # breach incidents overlapping no fault window
+
+    @property
+    def recall(self) -> float:
+        return (self.windows_detected / self.windows_total
+                if self.windows_total else 1.0)
+
+    @property
+    def clean(self) -> bool:
+        """True when a fault-free run stayed breach-free (vacuously True
+        for faulted runs — their score is recall/spurious)."""
+        return self.windows_total > 0 or self.incidents_total == 0
+
+    def to_json(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d.update(recall=self.recall, clean=self.clean)
+        return d
+
+
+def slo_breach_metrics(incidents: Sequence, windows: Sequence[Tuple[int, int]],
+                       grace_steps: int = 0) -> SLOBreachMetrics:
+    """Score a report's SLO-breach incidents against fault step windows.
+
+    Breach rows lag their cause — a flooded request breaches when it
+    *finishes*, which can be a full queue-drain after the burst window ends
+    — so serve scoring uses a larger ``grace_steps`` than detection scoring.
+    """
+    from repro.stream.incidents import match_incidents
+
+    breaches = [i for i in incidents
+                if getattr(i, "kind", "anomaly") == "slo_breach"]
+    m = match_incidents(breaches, windows, grace_steps=grace_steps)
+    return SLOBreachMetrics(
+        incidents_total=len(breaches), windows_total=len(windows),
+        windows_detected=m.windows_detected, spurious=len(m.spurious))
+
+
+# ---------------------------------------------------------------------------
 # diagnosis scoring (blamed kind / nodes / action vs the injected labels)
 # ---------------------------------------------------------------------------
 

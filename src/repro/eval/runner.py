@@ -14,6 +14,10 @@ zero-instrumentation contract — the step code never changes):
   the probe hooks, exactly as in the paper's testbed).
 * ``serve``: the real reduced-GPT-2 decode loop (`repro.serve.engine`), one
   monitored step per generated token.
+* ``request``: the continuous-batching engine under a deterministic
+  multi-tenant load (`repro.serve.continuous` on a `VirtualClock`), judged
+  by the SLO plane rather than the GMM detectors — serve-path faults
+  perturb the *request mix* and are scored via `slo_breach_metrics`.
 
 The run's first ``clean_fraction`` steps are fault-free by scenario
 construction; stream mode warms up there, batch mode gets a matching holdoff
@@ -32,14 +36,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.chaos import Fault, Scenario
-from repro.eval.metrics import (DetectionMetrics, DiagnosisMetrics, debounce,
+from repro.eval.metrics import (DetectionMetrics, DiagnosisMetrics,
+                                SLOBreachMetrics, debounce,
                                 detection_metrics, diagnosis_metrics,
-                                step_predictions)
+                                slo_breach_metrics, step_predictions)
 from repro.session import DetectorSpec, MonitorSpec, Session
 from repro.session.report import MonitorReport
 from repro.stream.incidents import IncidentMatch, match_incidents
 
 EVAL_PROBES = ["xla", "operator", "collective", "device", "step"]
+
+# request-workload cell: SLO targets and load shape, tuned so the nominal
+# arrival process never breaches (the serve_clean_control scenario must
+# close ZERO breach incidents) while each serve fault kind breaches its
+# signature metric well clear of the target
+SERVE_SLO = {"ttft_s": 0.4, "tpot_s": 0.08, "queue_wait_s": 0.2,
+             "queue_depth": 8, "min_breaches": 6, "gap_s": 0.5,
+             "close_after_s": 0.5}
+SERVE_LOAD = {"rate": 0.18, "prompt_len": (4, 12), "max_new": (4, 8)}
+SERVE_SLOTS = 4
+SERVE_DT = 0.02  # virtual seconds per engine step
+# breach rows lag the burst by a queue-drain, not just a flush interval
+SERVE_GRACE_STEPS = 40
 
 # a GPT-2-class DP all-reduce schedule for the synthetic workload (message
 # sizes in the gradient-bucket range), so the collective probe has traffic
@@ -117,12 +135,24 @@ class ScenarioRun:
         return match_incidents(self.report.incidents, self.windows,
                                grace_steps=grace_steps)
 
-    def diagnosis_metrics(self, grace_steps: int = 4) -> DiagnosisMetrics:
+    def slo_metrics(self, grace_steps: int = SERVE_GRACE_STEPS
+                    ) -> SLOBreachMetrics:
+        """Request-plane scoring: breach incidents vs serve fault windows."""
+        return slo_breach_metrics(self.report.incidents, self.windows,
+                                  grace_steps=grace_steps)
+
+    def diagnosis_metrics(self, grace_steps: Optional[int] = None
+                          ) -> DiagnosisMetrics:
         """Blamed-kind / blamed-node / action-match scoring of the report's
         diagnoses against the injected schedule (single-node runs: every
-        fault perturbs node 0). The step layer's detections double as the
-        collector-clock step mapping for step-less (device) diagnoses."""
+        fault perturbs node 0; request runs: the flood tenant is tenant 0).
+        The step layer's detections double as the collector-clock step
+        mapping for step-less (device) diagnoses."""
         from repro.core.events import Layer
+
+        if grace_steps is None:
+            grace_steps = (SERVE_GRACE_STEPS
+                           if self.scenario.workload == "request" else 4)
 
         clock = None
         det = self.report.detections.get(Layer.STEP)
@@ -169,15 +199,22 @@ def run_scenario(scenario: Scenario, mode: str,
     eval_start = int(n_steps * scenario.clean_fraction)
     injector = scenario.injector(n_steps)
     labels = injector.labels(n_steps)
-    spec = MonitorSpec(
-        mode=mode, probes=list(EVAL_PROBES),
-        probe_options={"device": {"interval": cfg.device_interval}},
-        detector=cfg.detector_spec(holdoff_steps=n_steps - eval_start,
-                                   seed=seed),
-        governor=False, seed=seed)
+    if scenario.workload == "request":
+        # the request plane is SLO-thresholded, not GMM-modelled: only the
+        # request probe attaches and the detector spec is irrelevant
+        spec = MonitorSpec(mode=mode, probes=["request"],
+                           slo=dict(SERVE_SLO), governor=False, seed=seed)
+        runner = _run_request_steps
+    else:
+        spec = MonitorSpec(
+            mode=mode, probes=list(EVAL_PROBES),
+            probe_options={"device": {"interval": cfg.device_interval}},
+            detector=cfg.detector_spec(holdoff_steps=n_steps - eval_start,
+                                       seed=seed),
+            governor=False, seed=seed)
+        runner = (_run_train_steps if scenario.workload == "train"
+                  else _run_serve_steps)
     session = Session(spec)
-    runner = (_run_train_steps if scenario.workload == "train"
-              else _run_serve_steps)
     t0 = time.perf_counter()
     step_ts = runner(session, injector, n_steps, eval_start, cfg, seed)
     wall = time.perf_counter() - t0
@@ -254,3 +291,40 @@ def _run_serve_steps(session: Session, injector, n_steps: int,
             state["tok"] = nxt.astype(jnp.int32)[:, None]
 
         return _drive(session, injector, n_steps, eval_start, cfg, one_step)
+
+
+@functools.lru_cache(maxsize=1)
+def _request_parts():
+    """Reduced-GPT-2 config/params for the continuous-batching workload."""
+    from repro.config import get_arch, reduced
+    from repro.models.model import Runtime, init_params
+
+    cfg = reduced(get_arch("gpt2"))
+    rt = Runtime(mesh=None, compute_dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, rt, params
+
+
+def _run_request_steps(session: Session, injector, n_steps: int,
+                       eval_start: int, cfg: EvalConfig, seed: int
+                       ) -> np.ndarray:
+    """Continuous-batching engine under deterministic load; serve faults
+    perturb the arrival mix via ``injector.serve_faults``. The engine runs
+    a `VirtualClock`, so every latency is a pure function of scheduling and
+    the cell is reproducible bit-for-bit from ``seed``."""
+    from repro.serve import (ContinuousBatchingEngine, LoadGenerator,
+                             VirtualClock)
+
+    model_cfg, rt, params = _request_parts()
+    eng = ContinuousBatchingEngine(
+        model_cfg, rt, params, slots=SERVE_SLOTS, max_len=n_steps + 96,
+        seed=seed, clock=VirtualClock(SERVE_DT), dtype=jnp.float32)
+    load = LoadGenerator(rate=SERVE_LOAD["rate"], seed=seed,
+                         prompt_len=SERVE_LOAD["prompt_len"],
+                         max_new=SERVE_LOAD["max_new"],
+                         vocab_size=model_cfg.vocab_size)
+    with session.monitoring():
+        eng.run(load, n_steps=n_steps,
+                faults_for_step=injector.serve_faults,
+                on_step=lambda s: session.on_step(s), drain=False)
+    return np.arange(n_steps, dtype=np.float64) * SERVE_DT

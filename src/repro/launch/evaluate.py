@@ -17,11 +17,13 @@ from __future__ import annotations
 import argparse
 import sys
 
-from repro.core.chaos import SMOKE_SCENARIOS, scenario_names
+from repro.core.chaos import (SERVE_SMOKE_SCENARIOS, SMOKE_SCENARIOS,
+                              scenario_names)
 from repro.eval.matrix import (CONFIG_GRID, FAR_CEILING, MODES,
                                clean_control_diagnoses, clean_control_far,
                                mean_kind_accuracy, render_leaderboard,
-                               run_matrix, save_matrix)
+                               run_matrix, save_matrix, serve_breach_recall,
+                               serve_clean_breaches)
 
 
 def _resolve_scenarios(arg: str) -> list:
@@ -29,6 +31,8 @@ def _resolve_scenarios(arg: str) -> list:
         return scenario_names()
     if arg == "smoke":
         return list(SMOKE_SCENARIOS)
+    if arg == "serve-smoke":
+        return list(SERVE_SMOKE_SCENARIOS)
     names = [s for s in arg.split(",") if s]
     known = set(scenario_names())
     unknown = sorted(set(names) - known)
@@ -53,7 +57,8 @@ def _resolve_configs(arg: str) -> list:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenarios", default="smoke",
-                    help="'all', 'smoke', or a comma-separated list "
+                    help="'all', 'smoke', 'serve-smoke', or a "
+                         "comma-separated list "
                          f"(all = {', '.join(scenario_names())})")
     ap.add_argument("--modes", default=",".join(MODES),
                     help="comma-separated subset of batch,stream")
@@ -72,6 +77,11 @@ def main(argv=None) -> int:
     ap.add_argument("--min-kind-acc", type=float, default=0.5,
                     help="min mean blamed-kind accuracy over faulted cells "
                          "(exit 1 below it; set 0 to disable)")
+    ap.add_argument("--min-breach-recall", type=float, default=1.0,
+                    help="min SLO-breach recall over faulted serve cells "
+                         "(exit 1 below it; the request plane is judged on "
+                         "a deterministic virtual clock, so 1.0 is "
+                         "achievable; set 0 to disable)")
     args = ap.parse_args(argv)
 
     scenarios = _resolve_scenarios(args.scenarios)
@@ -96,6 +106,16 @@ def main(argv=None) -> int:
         dg = row.get("diagnosis", {})
         acc = dg.get("kind_accuracy")
         acc_s = f"{100 * acc:5.1f}%" if acc is not None else "    —"
+        if "slo" in row:
+            s = row["slo"]
+            print(f"[eval] {row['scenario']:<22} {row['mode']:<6} "
+                  f"{row['config']:<14} "
+                  f"breach_inc={s['incidents_total']} "
+                  f"windows={s['windows_detected']}/{s['windows_total']} "
+                  f"spurious={s['spurious']} "
+                  f"diag={dg.get('diagnoses_total', 0)} kind_acc={acc_s} "
+                  f"({row['wall_s']:.1f}s)")
+            return
         print(f"[eval] {row['scenario']:<22} {row['mode']:<6} "
               f"{row['config']:<14} F1={100 * m['f1']:5.1f}% "
               f"FAR={100 * m['false_alarm_rate']:5.1f}% "
@@ -129,6 +149,18 @@ def main(argv=None) -> int:
     if acc is not None and acc < args.min_kind_acc:
         print(f"[eval] FAIL: mean blamed-kind accuracy {100 * acc:.1f}% < "
               f"{100 * args.min_kind_acc:.0f}% (--min-kind-acc)",
+              file=sys.stderr)
+        failed = True
+    n_breach = serve_clean_breaches(matrix)
+    if n_breach:
+        print(f"[eval] FAIL: {n_breach} SLO-breach incident(s) on the serve "
+              "clean control (must be 0 — see docs/serving.md)",
+              file=sys.stderr)
+        failed = True
+    br = serve_breach_recall(matrix)
+    if br is not None and br < args.min_breach_recall:
+        print(f"[eval] FAIL: serve breach recall {100 * br:.1f}% < "
+              f"{100 * args.min_breach_recall:.0f}% (--min-breach-recall)",
               file=sys.stderr)
         failed = True
     return 1 if failed else 0

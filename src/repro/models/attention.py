@@ -307,8 +307,13 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
     }
 
 
-def gqa_decode(params, cfg: ModelConfig, x, cache, index):
-    """x: (B, 1, d); index: scalar int32 absolute position. Returns (out, cache)."""
+def gqa_decode(params, cfg: ModelConfig, x, cache, index, start=None):
+    """x: (B, 1, d); index: scalar int32 absolute position. Returns (out, cache).
+
+    ``start``: optional (B,) int32 per-sequence first valid absolute position.
+    Continuous-batching serving reuses cache rows across requests; a sequence
+    that joined the batch at position ``start[b]`` must not attend to slots
+    written by the slot's previous occupant (positions < start[b])."""
     B = x.shape[0]
     hd = cfg.head_dim
     q = (x @ params["q"]["kernel"].astype(x.dtype)).reshape(B, 1, cfg.n_heads, hd)
@@ -333,7 +338,11 @@ def gqa_decode(params, cfg: ModelConfig, x, cache, index):
     valid = (pos_buf >= 0) & (pos_buf <= index)
     if cfg.sliding_window:
         valid = valid & (index - pos_buf < cfg.sliding_window)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    if start is None:
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    else:
+        valid = valid[None, :] & (pos_buf[None, :] >= start[:, None])  # (B,S)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)
@@ -342,9 +351,10 @@ def gqa_decode(params, cfg: ModelConfig, x, cache, index):
     return out, {"k": k_cache, "v": v_cache, "pos": pos_buf}
 
 
-def mla_decode(params, cfg: ModelConfig, x, cache, index):
+def mla_decode(params, cfg: ModelConfig, x, cache, index, start=None):
     """Weight-absorbed MLA decode (DeepSeek-V2 §absorption): scores and values
-    computed directly against the latent cache — no per-head K/V materialised."""
+    computed directly against the latent cache — no per-head K/V materialised.
+    ``start``: optional (B,) per-sequence first valid position (see gqa_decode)."""
     B = x.shape[0]
     H, dn, dr, dv, r = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
                         cfg.v_head_dim, cfg.kv_lora_rank)
@@ -372,7 +382,11 @@ def mla_decode(params, cfg: ModelConfig, x, cache, index):
     s = s / math.sqrt(dn + dr)
     S = ckv_cache.shape[1]
     valid = jnp.arange(S) <= index
-    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    if start is None:
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+    else:
+        valid = valid[None, :] & (jnp.arange(S)[None, :] >= start[:, None])
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhs,bsr->bhr", p.astype(ckv_cache.dtype), ckv_cache,
                        preferred_element_type=jnp.float32)
@@ -381,7 +395,7 @@ def mla_decode(params, cfg: ModelConfig, x, cache, index):
     return out, {"c_kv": ckv_cache, "k_rope": kr_cache}
 
 
-def attention_decode(params, cfg: ModelConfig, x, cache, index):
+def attention_decode(params, cfg: ModelConfig, x, cache, index, start=None):
     if cfg.attn_kind == "mla":
-        return mla_decode(params, cfg, x, cache, index)
-    return gqa_decode(params, cfg, x, cache, index)
+        return mla_decode(params, cfg, x, cache, index, start=start)
+    return gqa_decode(params, cfg, x, cache, index, start=start)

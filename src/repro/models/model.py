@@ -357,9 +357,10 @@ def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
-def _tf_block_decode(params, cfg, rt, x, cache, index, *, is_moe):
+def _tf_block_decode(params, cfg, rt, x, cache, index, *, is_moe, start=None):
     h = apply_norm(params["norm1"], cfg, x)
-    h, cache = attn.attention_decode(params["attn"], cfg, h, cache, index)
+    h, cache = attn.attention_decode(params["attn"], cfg, h, cache, index,
+                                     start=start)
     x = x + h
     h = apply_norm(params["norm2"], cfg, x)
     if is_moe:
@@ -379,9 +380,15 @@ def _mamba_block_decode(params, cfg, rt, x, cache):
     return x + y, cache
 
 
-def decode_step(params, cfg: ModelConfig, rt: Runtime, batch, caches, index):
+def decode_step(params, cfg: ModelConfig, rt: Runtime, batch, caches, index,
+                start=None):
     """One token step. batch: {"tokens": (B,1)} or {"embeddings": (B,1,d)}.
-    Returns (logits (B,1,V), new_caches)."""
+    Returns (logits (B,1,V), new_caches).
+
+    ``start``: optional (B,) int32 — each sequence's first valid absolute
+    position. Continuous-batching serving passes it so a request that joined
+    the running batch mid-flight never attends to cache slots written by the
+    slot's previous occupant (see `attention.gqa_decode`)."""
     x = _embed(params, cfg, rt, batch)
 
     if cfg.family in ("ssm", "hybrid"):
@@ -398,7 +405,8 @@ def decode_step(params, cfg: ModelConfig, rt: Runtime, batch, caches, index):
 
                 h, gcache = jax.lax.scan(inner, h, (gp, gcache))
                 hh = apply_norm(shared["norm1"], cfg, h)
-                hh, scache = attn.attention_decode(shared["attn"], cfg, hh, scache, index)
+                hh, scache = attn.attention_decode(shared["attn"], cfg, hh,
+                                                   scache, index, start=start)
                 h = h + hh
                 hh = apply_norm(shared["norm2"], cfg, h)
                 h = h + ffn_mod.ffn_forward(shared["ffn"], cfg, hh)
@@ -427,12 +435,14 @@ def decode_step(params, cfg: ModelConfig, rt: Runtime, batch, caches, index):
         new_head = []
         for hp, hc in zip(params.get("head_layers", []),
                           caches.get("head_layers", [])):
-            x, hc = _tf_block_decode(hp, cfg, rt, x, hc, index, is_moe=False)
+            x, hc = _tf_block_decode(hp, cfg, rt, x, hc, index, is_moe=False,
+                                     start=start)
             new_head.append(hc)
 
         def body(h, xs):
             lp, lc = xs
-            h, lc = _tf_block_decode(lp, cfg, rt, h, lc, index, is_moe=is_moe)
+            h, lc = _tf_block_decode(lp, cfg, rt, h, lc, index, is_moe=is_moe,
+                                     start=start)
             return h, lc
 
         x, lc = jax.lax.scan(body, x, (params["layers"], caches["layers"]))

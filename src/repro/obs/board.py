@@ -9,9 +9,11 @@ atomically every flush, so an operator keeps a browser tab open on it while
 the fleet runs.
 
 Sections: header strip (mode/uptime/totals), fleet health grid (one card
-per node, coloured by freshness state), per-layer table with flag-rate
-sparklines from the window snapshot history, active/recent incidents, and
-the top diagnoses with their recommended actions.
+per node, coloured by freshness state), request-plane tier (when a serve
+engine is monitored: throughput, TTFT/TPOT, occupancy, SLO breaches),
+per-layer table with flag-rate sparklines from the window snapshot history,
+active/recent incidents (tagged by kind: anomaly vs slo_breach), and the
+top diagnoses with their recommended actions.
 """
 from __future__ import annotations
 
@@ -62,6 +64,7 @@ class IncidentRow:
     severity: float
     n_flags: int
     status: str
+    kind: str = "anomaly"  # anomaly | slo_breach
 
 
 @dataclasses.dataclass
@@ -93,6 +96,9 @@ class BoardModel:
     totals: Dict[str, object]  # label -> value footer strip
     # group tier (hierarchical topologies only; empty = flat fleet)
     groups: List[GroupCard] = dataclasses.field(default_factory=list)
+    # request-plane tier (serve engine + SLO monitor; empty = no request
+    # probe attached) — the raw serve_stats() aggregates
+    serve: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @classmethod
     def from_obs(cls, obs, history: Dict[str, Sequence[float]],
@@ -154,7 +160,8 @@ class BoardModel:
             incident_id=i.incident_id, t_start=i.t_start, t_end=i.t_end,
             suspect_layer=i.suspect_layer.value,
             suspect_nodes=list(i.suspect_nodes), severity=i.severity,
-            n_flags=i.n_flags, status=i.status)
+            n_flags=i.n_flags, status=i.status,
+            kind=getattr(i, "kind", "anomaly"))
             for i in session.incidents_seen()[:max_incidents]]
         diagnoses = [DiagnosisCard(
             incident_id=d.incident_id, fault_kind=d.fault_kind,
@@ -168,7 +175,8 @@ class BoardModel:
                        "%Y-%m-%d %H:%M:%S"),
                    uptime_s=_time.time() - obs._t0, refresh_s=refresh_s,
                    nodes=nodes, layers=layers, incidents=incidents,
-                   diagnoses=diagnoses, totals=totals, groups=groups)
+                   diagnoses=diagnoses, totals=totals, groups=groups,
+                   serve=dict(session.serve_stats()))
 
 
 def _layer_rows(session, history: Dict[str, Sequence[float]]
@@ -300,6 +308,31 @@ def render_board(model: BoardModel) -> str:
               f"{g.events_shed} shed</span></div>")
         w("</div>")
 
+    if model.serve:  # request plane (serve engine monitored)
+        s = model.serve
+        breaches = int(s.get("slo_breaches_total", 0))
+        b_color = "#cf222e" if breaches else "#2da44e"
+        w("<h2>Request plane</h2>")
+        w('<div class="grid" id="serve">')
+        w(f'<div class="card"><span class="nid">throughput</span><br>'
+          f'<span class="meta">{int(s.get("requests_total", 0))} requests '
+          f'· {int(s.get("tokens_total", 0))} tokens</span></div>')
+        w(f'<div class="card"><span class="nid">latency</span><br>'
+          f'<span class="meta">'
+          f'TTFT {1e3 * s.get("ttft_mean_s", 0.0):.0f}ms · '
+          f'TPOT {1e3 * s.get("tpot_mean_s", 0.0):.0f}ms · '
+          f'wait {1e3 * s.get("queue_wait_mean_s", 0.0):.0f}ms</span></div>')
+        w(f'<div class="card"><span class="nid">load</span><br>'
+          f'<span class="meta">queue {int(s.get("queue_depth", 0))} deep · '
+          f'{100 * s.get("occupancy", 0.0):.0f}% slots busy</span></div>')
+        w(f'<div class="card"><span class="dot" '
+          f'style="background:{b_color}"></span>'
+          f'<span class="nid">SLO</span><br>'
+          f'<span class="meta">{breaches} breach rows · '
+          f'{int(s.get("slo_breach_incidents_total", 0))} incidents'
+          f'</span></div>')
+        w("</div>")
+
     w("<h2>Layers</h2>")
     if model.layers:
         w("<table><tr><th>layer</th><th class=num>window rows</th>"
@@ -317,13 +350,14 @@ def render_board(model: BoardModel) -> str:
 
     w("<h2>Incidents</h2>")
     if model.incidents:
-        w('<table id="incidents"><tr><th>#</th><th>window</th>'
-          "<th>suspect layer</th><th>nodes</th>"
+        w('<table id="incidents"><tr><th>#</th><th>kind</th>'
+          "<th>window</th><th>suspect layer</th><th>nodes</th>"
           "<th class=num>severity</th><th class=num>flags</th>"
           "<th>status</th></tr>")
         for i in model.incidents:
             nodes = ",".join(str(n) for n in i.suspect_nodes) or "-"
-            w(f"<tr><td>{i.incident_id}</td>"
+            w(f'<tr data-kind="{_esc(i.kind)}"><td>{i.incident_id}</td>'
+              f"<td>{_esc(i.kind)}</td>"
               f"<td>{i.t_start:.2f}s&ndash;{i.t_end:.2f}s</td>"
               f"<td>{_esc(i.suspect_layer)}</td><td>{_esc(nodes)}</td>"
               f'<td class="num sev">{i.severity:.1f}</td>'

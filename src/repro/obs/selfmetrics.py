@@ -92,6 +92,17 @@ METRIC_NAMES = (
     "eacgm_incidents_total",
     "eacgm_diagnoses_total",
     "eacgm_actions_total",
+    # request plane (continuous-batching serve engine + SLO monitor)
+    "eacgm_serve_requests_total",
+    "eacgm_serve_tokens_total",
+    "eacgm_serve_queue_wait_seconds_mean",
+    "eacgm_serve_ttft_seconds_mean",
+    "eacgm_serve_tpot_seconds_mean",
+    "eacgm_serve_client_stall_seconds_total",
+    "eacgm_serve_queue_depth",
+    "eacgm_serve_occupancy",
+    "eacgm_serve_slo_breaches_total",
+    "eacgm_serve_slo_breach_incidents_total",
     # the observability layer itself
     "eacgm_monitor_uptime_seconds",
     "eacgm_obs_scrapes_total",
@@ -294,6 +305,37 @@ class SessionObs:
             "eacgm_actions_total",
             "Governor actions recommended, by action kind",
             labels=("kind",))
+        self.serve_requests = r.counter(
+            "eacgm_serve_requests_total",
+            "Requests finished by the monitored serve engine")
+        self.serve_tokens = r.counter(
+            "eacgm_serve_tokens_total",
+            "Tokens generated by the monitored serve engine")
+        self.serve_queue_wait = r.gauge(
+            "eacgm_serve_queue_wait_seconds_mean",
+            "Mean enqueue-to-admission wait over finished requests")
+        self.serve_ttft = r.gauge(
+            "eacgm_serve_ttft_seconds_mean",
+            "Mean time-to-first-token (queue wait included) over "
+            "finished requests")
+        self.serve_tpot = r.gauge(
+            "eacgm_serve_tpot_seconds_mean",
+            "Mean inter-token delivery time over finished requests")
+        self.serve_stall = r.counter(
+            "eacgm_serve_client_stall_seconds_total",
+            "Cumulative client-side delivery stall folded into requests")
+        self.serve_queue_depth = r.gauge(
+            "eacgm_serve_queue_depth",
+            "Admission-queue depth at the last engine sample")
+        self.serve_occupancy = r.gauge(
+            "eacgm_serve_occupancy",
+            "Slot occupancy (0..1) at the last engine sample")
+        self.serve_breaches = r.counter(
+            "eacgm_serve_slo_breaches_total",
+            "Request rows that exceeded their SLO target")
+        self.serve_breach_incidents = r.counter(
+            "eacgm_serve_slo_breach_incidents_total",
+            "Closed SLO-breach incidents (request plane)")
         self.uptime = r.gauge(
             "eacgm_monitor_uptime_seconds",
             "Seconds since the session's observability layer came up")
@@ -339,6 +381,21 @@ class SessionObs:
         cache = SHAPE_CACHE.stats()
         self.compile_hits.set_total(cache["hits"])
         self.compile_misses.set_total(cache["misses"])
+        serve = s.serve_stats()
+        if serve:
+            self.serve_requests.set_total(serve.get("requests_total", 0.0))
+            self.serve_tokens.set_total(serve.get("tokens_total", 0.0))
+            self.serve_queue_wait.set(serve.get("queue_wait_mean_s", 0.0))
+            self.serve_ttft.set(serve.get("ttft_mean_s", 0.0))
+            self.serve_tpot.set(serve.get("tpot_mean_s", 0.0))
+            self.serve_stall.set_total(
+                serve.get("client_stall_total_s", 0.0))
+            self.serve_queue_depth.set(serve.get("queue_depth", 0.0))
+            self.serve_occupancy.set(serve.get("occupancy", 0.0))
+            self.serve_breaches.set_total(
+                serve.get("slo_breaches_total", 0.0))
+            self.serve_breach_incidents.set_total(
+                serve.get("slo_breach_incidents_total", 0.0))
         # incidents / diagnoses / actions accumulate on the session
         for layer, n in s.incident_counts().items():
             self.incidents_total.set_total(n, layer=layer)

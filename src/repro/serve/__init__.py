@@ -1,1 +1,7 @@
 from repro.serve.engine import ServeEngine, make_decode_step, make_prefill  # noqa: F401
+from repro.serve.request import LoadGenerator, Request, RequestQueue  # noqa: F401
+from repro.serve.scheduler import AdmissionScheduler  # noqa: F401
+from repro.serve.continuous import (ContinuousBatchingEngine,  # noqa: F401
+                                    VirtualClock, make_slot_step)
+from repro.serve.probe import RequestProbe, publish  # noqa: F401
+from repro.serve.slo import SLOMonitor, SLOSpec  # noqa: F401

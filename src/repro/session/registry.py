@@ -146,3 +146,13 @@ def _step_probe(opts: Dict[str, Any], peers: Dict[str, Probe]) -> Probe:
                      collective_probe=peers.get("collective"),
                      device_probe=peers.get("device"),
                      peak_flops=float(opts.get("peak_flops", 197e12)))
+
+
+@register_probe("request")
+def _request_probe(opts: Dict[str, Any], peers: Dict[str, Probe]) -> Probe:
+    # lazy: repro.serve pulls in the model stack, which non-serving sessions
+    # should not pay for just by importing the registry
+    from repro.serve.probe import RequestProbe
+
+    return RequestProbe(sample_every=int(opts.get("sample_every", 4)),
+                        slo_buffer=int(opts.get("slo_buffer", 8192)))

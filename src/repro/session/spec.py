@@ -124,6 +124,11 @@ class MonitorSpec:
     # stream mode only: node -> group -> fleet aggregation tree + the
     # agent-side backpressure governor (repro.fleet). None = flat monitor.
     topology: Optional[TopologySpec] = None
+    # request-plane service-level objectives (repro.serve.slo.SLOSpec or its
+    # dict form). When set and the "request" probe is attached, breaches of
+    # the declared targets close as kind="slo_breach" incidents — a separate
+    # plane from the GMM anomaly incidents above. None = SLOs not judged.
+    slo: Optional[Any] = None
     seed: int = 0
 
     def __post_init__(self) -> None:
@@ -131,6 +136,11 @@ class MonitorSpec:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
         if isinstance(self.detector, Mapping):
             self.detector = DetectorSpec.from_dict(self.detector)
+        if isinstance(self.slo, Mapping):
+            # lazy: repro.serve pulls in the model stack, which spec parsing
+            # (tools, docs checks) should not pay for unless SLOs are used
+            from repro.serve.slo import SLOSpec
+            self.slo = SLOSpec.from_dict(self.slo)
         if isinstance(self.topology, Mapping):
             _check_fields(TopologySpec, self.topology)
             self.topology = TopologySpec(**self.topology)

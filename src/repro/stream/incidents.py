@@ -57,6 +57,10 @@ class Incident:
     # engine reads this as the causal lead/lag ordering: the layer that
     # flagged first leads the chain (see repro.diagnosis).
     layer_first_ts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # "anomaly" (GMM density flags) or "slo_breach" (request-plane SLO
+    # thresholding, see repro.serve.slo) — the two planes cluster through
+    # the same engine but are reported and diagnosed separately
+    kind: str = "anomaly"
 
     def to_json(self) -> Dict[str, object]:
         d = dataclasses.asdict(self)
@@ -68,7 +72,8 @@ class Incident:
         steps = _fmt_steps(self.steps)
         layers = " ".join(f"{k}={v:.1f}" for k, v in sorted(
             self.layer_deficit.items(), key=lambda kv: -kv[1]))
-        return (f"[incident #{self.incident_id} {self.status}] "
+        tag = "" if self.kind == "anomaly" else f" {self.kind}"
+        return (f"[incident #{self.incident_id} {self.status}{tag}] "
                 f"t={self.t_start:.2f}s..{self.t_end:.2f}s "
                 f"suspect={self.suspect_layer.value} node(s)={nodes} "
                 f"severity={self.severity:.1f} flags={self.n_flags} "

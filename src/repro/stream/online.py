@@ -118,7 +118,10 @@ def _apply_baseline(fs: WindowFeatures, medians: Dict[str, float],
 class OnlineGMMDetector:
     """One warm-started GMM per layer over the aggregator's sliding windows."""
 
-    LAYERS = tuple(Layer)
+    # REQUEST rows are SLO-thresholded by the serve plane, not GMM-modelled:
+    # request latencies are workload-shaped (queue wait under load), so a
+    # density fit over them would alarm on every traffic change.
+    LAYERS = tuple(l for l in Layer if l is not Layer.REQUEST)
 
     def __init__(self, n_components: int = 3, contamination: float = 0.02,
                  refit_iters: int = 4, cold_iters: int = 40,

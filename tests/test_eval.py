@@ -71,7 +71,7 @@ def test_builtin_scenarios_registered_and_valid():
     assert set(SMOKE_SCENARIOS) <= set(names)
     for s in BUILTIN_SCENARIOS:
         assert get_scenario(s.name) is s
-        assert s.workload in ("train", "serve")
+        assert s.workload in ("train", "serve", "request")
         assert set(s.kinds) <= set(ALL_KINDS)
         faults = s.build_faults(240)
         labels = s.injector(240).labels(240)

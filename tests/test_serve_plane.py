@@ -1,0 +1,277 @@
+"""Request plane: continuous-batching engine, deterministic load/scheduling,
+per-request accounting on the virtual clock, and SLO-breach monitoring
+through the Session API (see docs/serving.md)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_arch, reduced
+from repro.models.model import Runtime, init_params
+from repro.serve import (AdmissionScheduler, ContinuousBatchingEngine,
+                         LoadGenerator, Request, RequestQueue, ServeEngine,
+                         SLOMonitor, SLOSpec, VirtualClock)
+from repro.session import MonitorSpec, Session
+
+# the tuned operating point the eval scenarios run at (see
+# repro.eval.runner.SERVE_SLO): clean traffic sits ~2x under every target,
+# the injected faults ~2-4x over
+SLO = {"ttft_s": 0.4, "tpot_s": 0.08, "queue_wait_s": 0.2, "queue_depth": 8,
+       "min_breaches": 6, "gap_s": 0.5, "close_after_s": 0.5}
+DT = 0.02
+
+
+@functools.lru_cache(maxsize=1)
+def _parts():
+    cfg = reduced(get_arch("gpt2"))
+    rt = Runtime(mesh=None, compute_dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, rt, params
+
+
+def _drain(eng, queue):
+    s = 0
+    while len(queue) or eng.n_active:
+        eng.tick(s, None, queue, None)
+        s += 1
+    return s
+
+
+# ---------------------------------------------------------------------------
+# load generator + scheduler determinism
+# ---------------------------------------------------------------------------
+
+def test_load_generator_is_pure_in_seed_and_step():
+    a = LoadGenerator(rate=0.5, seed=3, vocab_size=64)
+    b = LoadGenerator(rate=0.5, seed=3, vocab_size=64)
+    for s in range(60):
+        ra, rb = a.arrivals(s, 0.1 * s), b.arrivals(s, 0.1 * s)
+        assert len(ra) == len(rb)
+        for x, y in zip(ra, rb):
+            assert (x.tenant, x.max_new_tokens) == (y.tenant,
+                                                    y.max_new_tokens)
+            np.testing.assert_array_equal(x.prompt, y.prompt)
+    other = LoadGenerator(rate=0.5, seed=4, vocab_size=64)
+    sig = lambda g: [len(g.arrivals(s, 0.0)) for s in range(60)]  # noqa: E731
+    assert sig(other) != sig(LoadGenerator(rate=0.5, seed=3, vocab_size=64))
+
+
+def test_load_generator_fault_perturbations():
+    def mix(faults):
+        g = LoadGenerator(rate=0.4, seed=7, vocab_size=64)
+        reqs = [r for s in range(300) for r in g.arrivals(s, 0.0, faults)]
+        return reqs
+
+    base = mix(None)
+    flood = mix({"tenant_flood": 8.0})
+    t0 = lambda rs: sum(r.tenant == 0 for r in rs)  # noqa: E731
+    assert t0(flood) > 3 * t0(base)  # flood multiplies tenant 0's rate
+    heavy = mix({"heavy_prompt_skew": 4.0})
+    assert (np.mean([r.prompt_len for r in heavy])
+            > 2 * np.mean([r.prompt_len for r in base]))
+    stall = mix({"slow_client_stall": 0.08})
+    assert all(r.client_stall_s == pytest.approx(0.08) for r in stall)
+    assert all(r.client_stall_s == 0.0 for r in base)
+
+
+def test_admission_scheduler_fcfs_capacity_guard():
+    sched = AdmissionScheduler(max_len=20)
+    q = RequestQueue()
+    big = Request(req_id=0, tenant=0, prompt=np.ones(10, np.int32),
+                  max_new_tokens=10, enqueue_ts=0.0)
+    small = Request(req_id=1, tenant=0, prompt=np.ones(2, np.int32),
+                    max_new_tokens=2, enqueue_ts=0.0)
+    q.push(big)
+    q.push(small)
+    # the big head fits at index 0 but not at index 5 — and the small
+    # request behind it must NOT jump the blocked head (strict FCFS)
+    assert sched.select(q, 5, free_slots=2) == []
+    assert len(q) == 2
+    picked = sched.select(q, 0, free_slots=2)
+    assert [r.req_id for r in picked] == [0, 1]
+    # epoch reset: only when idle, index moved, and rewinding helps
+    assert not sched.epoch_reset(big, 5, n_active=1)
+    assert not sched.epoch_reset(None, 5, n_active=0)
+    assert sched.epoch_reset(big, 5, n_active=0)
+
+
+def _run_load(seed, faults=None, n_steps=120):
+    cfg, rt, params = _parts()
+    eng = ContinuousBatchingEngine(cfg, rt, params, slots=4,
+                                   max_len=n_steps + 96, seed=seed,
+                                   clock=VirtualClock(DT),
+                                   dtype=jnp.float32)
+    load = LoadGenerator(rate=0.18, seed=seed, prompt_len=(4, 12),
+                         max_new=(4, 8), vocab_size=cfg.vocab_size)
+    eng.run(load, n_steps=n_steps, faults_for_step=faults, drain=False)
+    return eng
+
+
+def test_engine_run_is_deterministic_under_fixed_seed():
+    sig = lambda eng: [(r.req_id, r.tenant, r.tokens_out, r.queue_wait,  # noqa: E731
+                        r.ttft, r.tpot, tuple(r.tokens))
+                       for r in eng.finished]
+    a, b = _run_load(5), _run_load(5)
+    assert len(a.finished) > 10
+    assert sig(a) == sig(b)
+
+
+# ---------------------------------------------------------------------------
+# mid-flight join correctness vs the static oracle
+# ---------------------------------------------------------------------------
+
+def test_join_evict_matches_static_batch_oracle():
+    """Requests joining slots mid-flight (non-zero start index, recycled
+    lanes) must generate token-for-token what each request generates alone
+    through the fixed-batch engine from a fresh cache."""
+    cfg, rt, params = _parts()
+    rng = np.random.default_rng(11)
+    reqs = [Request(req_id=i, tenant=0,
+                    prompt=rng.integers(1, cfg.vocab_size, size=int(
+                        rng.integers(3, 7))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(4, 7)), enqueue_ts=0.0)
+            for i in range(6)]
+    eng = ContinuousBatchingEngine(cfg, rt, params, slots=2, max_len=256,
+                                   seed=0, clock=VirtualClock(DT))
+    queue = RequestQueue()
+    for r in reqs:
+        queue.push(r)
+    _drain(eng, queue)
+    assert len(eng.finished) == len(reqs)
+    assert any(r.start_index > 0 for r in eng.finished)  # real joins
+
+    oracle = ServeEngine(cfg=cfg, rt=rt, params=params, batch_size=1,
+                         max_len=64, seed=0)
+    for r in sorted(eng.finished, key=lambda r: r.req_id):
+        out = oracle.generate(r.prompt[None, :], r.max_new_tokens)
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens), out[0, r.prompt_len:],
+            err_msg=f"req {r.req_id} joined at index {r.start_index}")
+
+
+# ---------------------------------------------------------------------------
+# per-request accounting on the virtual clock
+# ---------------------------------------------------------------------------
+
+def test_ttft_tpot_accounting_on_virtual_clock():
+    cfg, rt, params = _parts()
+    dt, plen, n_new = 0.05, 5, 4
+    eng = ContinuousBatchingEngine(cfg, rt, params, slots=1, max_len=64,
+                                   seed=0, clock=VirtualClock(dt),
+                                   dtype=jnp.float32)
+    req = Request(req_id=0, tenant=1,
+                  prompt=np.arange(1, plen + 1, dtype=np.int32),
+                  max_new_tokens=n_new, enqueue_ts=0.0)
+    q = RequestQueue()
+    q.push(req)
+    _drain(eng, q)
+    (fin,) = eng.finished
+    # admitted on the first tick (t=0); teacher-forced prefill consumes
+    # plen-1 further steps, so the first token lands at (plen-1)*dt and
+    # each later token one dt apart
+    assert fin.queue_wait == 0.0
+    assert fin.ttft == pytest.approx((plen - 1) * dt)
+    assert fin.tpot == pytest.approx(dt)
+    assert fin.e2e == pytest.approx((plen + n_new - 2) * dt)
+    assert fin.tokens_out == n_new
+
+
+def test_client_stall_inflates_delivery_not_compute():
+    cfg, rt, params = _parts()
+    dt, plen, n_new, stall = 0.05, 3, 5, 0.1
+    eng = ContinuousBatchingEngine(cfg, rt, params, slots=1, max_len=64,
+                                   seed=0, clock=VirtualClock(dt),
+                                   dtype=jnp.float32)
+    req = Request(req_id=0, tenant=0,
+                  prompt=np.arange(1, plen + 1, dtype=np.int32),
+                  max_new_tokens=n_new, enqueue_ts=0.0,
+                  client_stall_s=stall)
+    q = RequestQueue()
+    q.push(req)
+    steps = _drain(eng, q)
+    (fin,) = eng.finished
+    assert fin.ttft == pytest.approx((plen - 1) * dt + stall)
+    assert fin.tpot == pytest.approx(dt + stall)
+    assert fin.stall_s == pytest.approx(n_new * stall)
+    # the stall is client-side: the engine finished in the same number of
+    # compute steps an unstalled request would take
+    assert steps == plen + n_new - 1
+
+
+# ---------------------------------------------------------------------------
+# SLO monitor (unit)
+# ---------------------------------------------------------------------------
+
+def _rows(name, dur, n=10, tenant=0, size=8.0):
+    return {"name": np.array([name] * n),
+            "ts": np.linspace(0.0, 0.9, n),
+            "dur": np.full(n, float(dur)),
+            "size": np.full(n, float(size)),
+            "step": np.arange(n, dtype=np.int64),
+            "tenant": np.full(n, tenant, dtype=np.int64),
+            "req_id": np.arange(n, dtype=np.int64)}
+
+
+def test_slo_monitor_closes_breach_incident():
+    mon = SLOMonitor(SLOSpec(ttft_s=0.1, min_breaches=3, gap_s=0.5,
+                             close_after_s=0.2))
+    assert mon.observe(_rows("serve/ttft", dur=0.5)) == 10
+    incs = mon.tick(now=10.0)
+    assert len(incs) == 1
+    assert incs[0].kind == "slo_breach"
+    assert mon.breaches_total == 10
+    assert 0 in incs[0].suspect_nodes  # tenant id rides as the node
+
+
+def test_slo_monitor_silent_on_met_targets():
+    mon = SLOMonitor(SLOSpec())
+    assert mon.observe(_rows("serve/ttft", dur=0.01)) == 0
+    assert mon.observe(_rows("serve/queue_depth", dur=0.0, size=3.0)) == 0
+    assert mon.tick(now=10.0) == []
+    assert mon.flush() == []
+
+
+def test_slo_spec_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown SLOSpec field"):
+        SLOSpec.from_dict({"ttft_ms": 400})
+
+
+# ---------------------------------------------------------------------------
+# end to end through the Session API
+# ---------------------------------------------------------------------------
+
+def _serve_report(faults, n_steps=200, seed=0):
+    cfg, rt, params = _parts()
+    spec = MonitorSpec(mode="batch", probes=["request"], slo=dict(SLO),
+                       governor=False, seed=seed)
+    session = Session(spec)
+    eng = ContinuousBatchingEngine(cfg, rt, params, slots=4,
+                                   max_len=n_steps + 96, seed=seed,
+                                   clock=VirtualClock(DT),
+                                   dtype=jnp.float32)
+    load = LoadGenerator(rate=0.18, seed=seed, prompt_len=(4, 12),
+                         max_new=(4, 8), vocab_size=cfg.vocab_size)
+    with session.monitoring():
+        eng.run(load, n_steps=n_steps, faults_for_step=faults,
+                on_step=session.on_step, drain=False)
+    return session.result()
+
+
+def test_tenant_flood_pages_with_request_plane_diagnosis():
+    report = _serve_report(
+        lambda s: {"tenant_flood": 8.0} if 60 <= s < 120 else {})
+    slo = [i for i in report.incidents
+           if getattr(i, "kind", "anomaly") == "slo_breach"]
+    assert slo, "sustained flood must close an slo_breach incident"
+    assert all(i.suspect_layer.value == "request" for i in slo)
+    kinds = [d.fault_kind for d in report.diagnoses]
+    assert "tenant_flood" in kinds
+
+
+def test_clean_serve_control_pages_zero():
+    report = _serve_report(lambda s: {})
+    assert [i for i in report.incidents
+            if getattr(i, "kind", "anomaly") == "slo_breach"] == []
+    assert report.diagnoses == []

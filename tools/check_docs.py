@@ -29,6 +29,10 @@ Two families of checks, both run by CI and by tests/test_docs.py:
   knobs (`async_detect` / `executor` / `incremental`), and every
   `eacgm_detect_*` self-metric family — the async-plane contract must
   track the code that implements it.
+* **serving**: docs/serving.md must document every `SLOSpec` field, every
+  serve fault kind (`repro.core.chaos.SERVE_KINDS`), every `serve/*` row
+  name, and every `eacgm_serve_*` self-metric family — the request-plane
+  contract must track the engine and SLO monitor.
 
 Exit code 0 = clean; 1 = problems (printed one per line).
 """
@@ -254,11 +258,51 @@ def check_detection() -> List[str]:
     return problems
 
 
+def check_serving() -> List[str]:
+    """Request-plane reference coverage: every SLOSpec field, serve fault
+    kind, `serve/*` row name, and `eacgm_serve_*` metric family must appear
+    in docs/serving.md (drift gate: a new SLO knob or serve metric without
+    docs fails CI)."""
+    import dataclasses
+
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.chaos import SERVE_KINDS
+    from repro.obs import METRIC_NAMES
+    from repro.serve.probe import REQUEST_ROW_NAMES
+    from repro.serve.slo import SLOSpec
+
+    path = os.path.join(REPO, "docs", "serving.md")
+    rel = os.path.relpath(path, REPO)
+    if not os.path.exists(path):
+        return [f"{rel}: missing (the request-plane reference is required)"]
+    text = open(path).read()
+    problems = []
+    for field in dataclasses.fields(SLOSpec):
+        if f"`{field.name}`" not in text:
+            problems.append(
+                f"{rel}: SLOSpec field `{field.name}` is undocumented")
+    for kind in SERVE_KINDS:
+        if f"`{kind}`" not in text:
+            problems.append(
+                f"{rel}: serve fault kind `{kind}` is undocumented")
+    for name in REQUEST_ROW_NAMES:
+        if f"`{name}`" not in text:
+            problems.append(
+                f"{rel}: request row name `{name}` is undocumented")
+    for name in METRIC_NAMES:
+        if name.startswith("eacgm_serve_") and name not in text:
+            problems.append(
+                f"{rel}: serve self-metric `{name}` is undocumented")
+    if "`slo_breach`" not in text:
+        problems.append(f"{rel}: incident kind `slo_breach` is undocumented")
+    return problems
+
+
 def main() -> int:
     files = doc_files()
     problems = (check_links(files) + check_spec_reference()
                 + check_runbook() + check_observability() + check_fleet()
-                + check_detection())
+                + check_detection() + check_serving())
     for p in problems:
         print(p)
     print(f"checked {len(files)} file(s): "
