@@ -1,14 +1,24 @@
-"""Async detection plane: background sweeps, shape buckets, sweep guard.
+"""Detection plane: async sweeps, shape buckets, sweep guard, and the
+pluggable score-model families.
 
-Everything here exists so that GMM sweeps (EM refits + window scoring) run
-*off* the step/ingest thread, on snapshots, with results admitted back at
-the next cadence point — see docs/detection.md for the hand-off contract.
+The async half exists so that detection sweeps (EM refits + window
+scoring) run *off* the step/ingest thread, on snapshots, with results
+admitted back at the next cadence point — see docs/detection.md for the
+hand-off contract. The family half (`repro.detect.families`) is the
+bake-off's model zoo: isolation ensemble, MAD floor, and spectral residual
+behind one score convention, pluggable beside the GMM via the session
+detector registry.
 """
 from repro.detect.cache import (MIN_BUCKET, SHAPE_CACHE, ShapeBucketCache,
                                 bucket_rows, enable_persistent_cache,
                                 pad_to_bucket)
 from repro.detect.executor import DetectionExecutor, SweepResult
+from repro.detect.families import (MODEL_FAMILIES, ModelStackMonitor,
+                                   ScoreModel, model_factory)
 from repro.detect.guard import detection_zone, in_detection_zone
+from repro.detect.isoforest import IsolationEnsemble
+from repro.detect.robust import RobustMADModel
+from repro.detect.spectral import SpectralResidualModel
 
 __all__ = [
     "MIN_BUCKET",
@@ -21,4 +31,11 @@ __all__ = [
     "SweepResult",
     "detection_zone",
     "in_detection_zone",
+    "MODEL_FAMILIES",
+    "ModelStackMonitor",
+    "ScoreModel",
+    "model_factory",
+    "IsolationEnsemble",
+    "RobustMADModel",
+    "SpectralResidualModel",
 ]

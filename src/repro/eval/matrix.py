@@ -25,8 +25,10 @@ FAR_CEILING = 0.15
 MODES = ("batch", "stream")
 
 # the named config axis: detector variants the matrix sweeps. "default" is
-# the tuned operating point; the rest move one knob each (components K,
-# window width, warm-start) so regressions are attributable.
+# the tuned GMM operating point; the single-knob variants (components K,
+# window width, warm-start) keep regressions attributable, and the family
+# configs put every registered detector backend on the same scenarios for
+# the bake-off.
 CONFIG_GRID: Dict[str, EvalConfig] = {
     c.name: c for c in (
         EvalConfig(name="default"),
@@ -35,8 +37,15 @@ CONFIG_GRID: Dict[str, EvalConfig] = {
         EvalConfig(name="wide_window", flush_every=40, sweep_every=120),
         EvalConfig(name="narrow_window", flush_every=10, sweep_every=30),
         EvalConfig(name="no_warm_start", warm_start=False),
+        EvalConfig(name="isoforest", backend="isoforest", diagnosis=False),
+        EvalConfig(name="mad", backend="mad", diagnosis=False),
+        EvalConfig(name="spectral", backend="spectral", diagnosis=False),
     )
 }
+
+# the bake-off slice: one config per detector family, identical everywhere
+# else, so per-cell wins measure the family and not the tuning
+BAKEOFF_CONFIGS = ("default", "isoforest", "mad", "spectral")
 
 
 def run_matrix(scenarios: Sequence[str], modes: Sequence[str] = MODES,
@@ -63,6 +72,7 @@ def run_matrix(scenarios: Sequence[str], modes: Sequence[str] = MODES,
                     if isinstance(c, str) and c in CONFIG_GRID},
         "far_ceiling": FAR_CEILING,
         "rows": rows,
+        "winners": crown_winners(rows),
     }
 
 
@@ -70,6 +80,23 @@ def _config_json(cfg: EvalConfig) -> Dict[str, object]:
     import dataclasses
 
     return dataclasses.asdict(cfg)
+
+
+def _detect_cost_ms(run) -> Optional[float]:
+    """Per-window detection cost (ms) from the report's overhead section.
+
+    Stream cells report the monitor's own ``detect_ms_per_tick`` (one tick
+    = one window); batch cells derive it from the detection executor's
+    busy-time over completed sweeps. None when the cell never swept."""
+    overhead = run.report.overhead or {}
+    stream = overhead.get("stream") or {}
+    cost = stream.get("detect_ms_per_tick")
+    if cost is None:
+        plane = overhead.get("detect_plane") or {}
+        completed = plane.get("completed") or 0
+        if completed:
+            cost = 1e3 * float(plane.get("busy_seconds", 0.0)) / completed
+    return None if cost is None else round(float(cost), 3)
 
 
 def _row(run) -> Dict[str, object]:
@@ -81,6 +108,8 @@ def _row(run) -> Dict[str, object]:
         "expected_layers": list(run.scenario.expected_layers),
         "mode": run.mode,
         "config": run.config.name,
+        "detector": run.config.backend,
+        "detect_ms_per_window": _detect_cost_ms(run),
         "eval_start": run.eval_start,
         "fault_windows": [list(w) for w in run.windows],
         "metrics": m.to_json(),
@@ -94,11 +123,12 @@ def _row(run) -> Dict[str, object]:
     if im is not None:
         row["incidents"] = {"count": len(run.report.incidents),
                             **im.to_json()}
-    dm = run.diagnosis_metrics()
-    row["diagnosis"] = {
-        "kinds": [d.fault_kind for d in run.report.diagnoses],
-        "actions": [d.action.kind for d in run.report.diagnoses],
-        **dm.to_json()}
+    if run.config.diagnosis:
+        dm = run.diagnosis_metrics()
+        row["diagnosis"] = {
+            "kinds": [d.fault_kind for d in run.report.diagnoses],
+            "actions": [d.action.kind for d in run.report.diagnoses],
+            **dm.to_json()}
     if run.scenario.workload == "request":
         row["slo"] = run.slo_metrics().to_json()
     return row
@@ -151,6 +181,66 @@ def mean_kind_accuracy(matrix: Dict[str, object]) -> Optional[float]:
     return float(sum(accs) / len(accs)) if accs else None
 
 
+# -- per-cell winners ---------------------------------------------------------
+
+def _cell_quality(row: Dict[str, object]) -> tuple:
+    """Ranking key within a (fault kind, mode) cell: quality first (F1 to
+    4 places — ties at that resolution are noise), then cheaper detection
+    (unknown cost ranks below any measured cost)."""
+    f1 = row["metrics"]["f1"] or 0.0
+    cost = row.get("detect_ms_per_window")
+    return (round(float(f1), 4), -(float("inf") if cost is None else cost))
+
+
+def _winner_entry(row: Dict[str, object]) -> Dict[str, object]:
+    m = row["metrics"]
+    return {"detector": row.get("detector", "gmm"),
+            "config": row["config"],
+            "scenario": row["scenario"],
+            "f1": m["f1"],
+            "recall": m["recall"],
+            "false_alarm_rate": m["false_alarm_rate"],
+            "detect_ms_per_window": row.get("detect_ms_per_window")}
+
+
+def crown_winners(rows: List[Dict[str, object]]
+                  ) -> List[Dict[str, object]]:
+    """The bake-off verdict: per fault-kind x mode cell, the best detector
+    family (quality-first, detection cost as the tiebreak).
+
+    Request-workload cells are excluded — the SLO plane thresholds them
+    without any detector family in the loop. Within a cell each family is
+    first reduced to its best row (families can enter under several
+    configs), then families compete; the runner-up is kept so the margin
+    is visible in the leaderboard."""
+    cells: Dict[tuple, List[Dict[str, object]]] = {}
+    for row in rows:
+        if row["workload"] == "request" or not row["metrics"]["faults_total"]:
+            continue
+        for kind in row["kinds"]:
+            cells.setdefault((kind, row["mode"]), []).append(row)
+    winners: List[Dict[str, object]] = []
+    for (kind, mode) in sorted(cells):
+        best_by_family: Dict[str, Dict[str, object]] = {}
+        for row in cells[(kind, mode)]:
+            fam = row.get("detector", "gmm")
+            cur = best_by_family.get(fam)
+            if cur is None or _cell_quality(row) > _cell_quality(cur):
+                best_by_family[fam] = row
+        ranked = sorted(best_by_family.values(), key=_cell_quality,
+                        reverse=True)
+        winners.append({
+            "kind": kind,
+            "mode": mode,
+            "winner": _winner_entry(ranked[0]),
+            "runner_up": (_winner_entry(ranked[1])
+                          if len(ranked) > 1 else None),
+            "families": {fam: _winner_entry(r)
+                         for fam, r in sorted(best_by_family.items())},
+        })
+    return winners
+
+
 # -- rendering ----------------------------------------------------------------
 
 def _fmt(x, pct: bool = False) -> str:
@@ -168,9 +258,10 @@ def render_leaderboard(matrix: Dict[str, object]) -> str:
         "step-level over the live region (see docs/evaluation.md). "
         f"Clean-control false-alarm ceiling: {100 * matrix['far_ceiling']:.0f}%.",
         "",
-        "| scenario | workload | mode | config | precision | recall | F1 "
-        "| FAR | TTD (steps) | faults hit | diag | kind acc | action match |",
-        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+        "| scenario | workload | mode | config | detector | precision "
+        "| recall | F1 | FAR | TTD (steps) | detect ms/win | faults hit "
+        "| diag | kind acc | action match |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     rows = sorted(matrix["rows"],
                   key=lambda r: (r["scenario"], r["mode"], r["config"]))
@@ -184,14 +275,41 @@ def render_leaderboard(matrix: Dict[str, object]) -> str:
         prf = [_fmt(m[k] if faulty else None, pct=True)
                for k in ("precision", "recall", "f1")]
         dg = r.get("diagnosis", {})
+        cost = r.get("detect_ms_per_window")
         lines.append(
             f"| {r['scenario']} | {r['workload']} | {r['mode']} "
-            f"| {r['config']} | {prf[0]} | {prf[1]} | {prf[2]} "
+            f"| {r['config']} | {r.get('detector', 'gmm')} "
+            f"| {prf[0]} | {prf[1]} | {prf[2]} "
             f"| {_fmt(m['false_alarm_rate'], pct=True)} "
-            f"| {_fmt(m['ttd_steps'])} | {faults} "
-            f"| {dg.get('diagnoses_total', 0)} "
+            f"| {_fmt(m['ttd_steps'])} "
+            f"| {'—' if cost is None else f'{cost:.2f}'} | {faults} "
+            f"| {dg.get('diagnoses_total', '—')} "
             f"| {_fmt(dg.get('kind_accuracy'), pct=True)} "
             f"| {_fmt(dg.get('action_match_rate'), pct=True)} |")
+    winners = matrix.get("winners") or []
+    if winners:
+        lines += [
+            "",
+            "## Per-cell winners",
+            "",
+            "Best detector family per fault-kind x mode cell; quality "
+            "(F1) first, per-window detection cost breaks ties.",
+            "",
+            "| fault kind | mode | winner | F1 | FAR | detect ms/win "
+            "| runner-up |",
+            "|---|---|---|---|---|---|---|",
+        ]
+        for w in winners:
+            win, ru = w["winner"], w["runner_up"]
+            cost = win["detect_ms_per_window"]
+            ru_txt = ("—" if ru is None else
+                      f"{ru['detector']} ({_fmt(ru['f1'], pct=True)})")
+            lines.append(
+                f"| {w['kind']} | {w['mode']} | **{win['detector']}** "
+                f"| {_fmt(win['f1'], pct=True)} "
+                f"| {_fmt(win['false_alarm_rate'], pct=True)} "
+                f"| {'—' if cost is None else f'{cost:.2f}'} "
+                f"| {ru_txt} |")
     far = clean_control_far(matrix)
     if far is not None:
         verdict = "PASS" if far < matrix["far_ceiling"] else "FAIL"

@@ -71,6 +71,13 @@ class EvalConfig:
     """One detector configuration of the matrix (spec fields + scoring)."""
 
     name: str = "default"
+    backend: str = "gmm"       # detector-registry family (the bake-off axis)
+    # root-cause attribution is calibrated in GMM log-density nats (the
+    # Diagnoser's min_mean_deficit floor); the other families' score scales
+    # are not nats, so their deficits sit arbitrarily around the floor and
+    # would diagnose (or not) on host timing noise. Family configs run
+    # detection-only; blamed-kind quality is a GMM column.
+    diagnosis: bool = True
     n_components: int = 3
     contamination: float = 0.02
     min_events: int = 32
@@ -86,6 +93,7 @@ class EvalConfig:
 
     def detector_spec(self, holdoff_steps: int, seed: int) -> DetectorSpec:
         return DetectorSpec(
+            backend=self.backend,
             n_components=self.n_components,
             contamination=self.contamination,
             min_events=self.min_events, seed=seed,
@@ -211,7 +219,7 @@ def run_scenario(scenario: Scenario, mode: str,
             probe_options={"device": {"interval": cfg.device_interval}},
             detector=cfg.detector_spec(holdoff_steps=n_steps - eval_start,
                                        seed=seed),
-            governor=False, seed=seed)
+            diagnosis=cfg.diagnosis, governor=False, seed=seed)
         runner = (_run_train_steps if scenario.workload == "train"
                   else _run_serve_steps)
     session = Session(spec)

@@ -19,11 +19,11 @@ import sys
 
 from repro.core.chaos import (SERVE_SMOKE_SCENARIOS, SMOKE_SCENARIOS,
                               scenario_names)
-from repro.eval.matrix import (CONFIG_GRID, FAR_CEILING, MODES,
-                               clean_control_diagnoses, clean_control_far,
-                               mean_kind_accuracy, render_leaderboard,
-                               run_matrix, save_matrix, serve_breach_recall,
-                               serve_clean_breaches)
+from repro.eval.matrix import (BAKEOFF_CONFIGS, CONFIG_GRID, FAR_CEILING,
+                               MODES, clean_control_diagnoses,
+                               clean_control_far, mean_kind_accuracy,
+                               render_leaderboard, run_matrix, save_matrix,
+                               serve_breach_recall, serve_clean_breaches)
 
 
 def _resolve_scenarios(arg: str) -> list:
@@ -46,11 +46,14 @@ def _resolve_scenarios(arg: str) -> list:
 def _resolve_configs(arg: str) -> list:
     if arg == "grid":
         return list(CONFIG_GRID)
+    if arg == "bakeoff":
+        return list(BAKEOFF_CONFIGS)
     names = [c for c in arg.split(",") if c]
     unknown = sorted(set(names) - set(CONFIG_GRID))
     if unknown:
         raise SystemExit(f"unknown config(s) {unknown}; "
-                         f"available: {', '.join(CONFIG_GRID)} (or 'grid')")
+                         f"available: {', '.join(CONFIG_GRID)} "
+                         "(or 'grid' / 'bakeoff')")
     return names
 
 
@@ -63,7 +66,8 @@ def main(argv=None) -> int:
     ap.add_argument("--modes", default=",".join(MODES),
                     help="comma-separated subset of batch,stream")
     ap.add_argument("--configs", default="default",
-                    help="'grid' or a comma-separated subset of "
+                    help="'grid', 'bakeoff' (one config per detector "
+                         "family), or a comma-separated subset of "
                          f"{', '.join(CONFIG_GRID)}")
     ap.add_argument("--steps", type=int, default=240,
                     help="steps per scenario run")
@@ -157,6 +161,19 @@ def main(argv=None) -> int:
               "clean control (must be 0 — see docs/serving.md)",
               file=sys.stderr)
         failed = True
+    expected_cells = sorted({
+        (kind, r["mode"]) for r in matrix["rows"]
+        if r["workload"] != "request" and r["metrics"]["faults_total"]
+        for kind in r["kinds"]})
+    if expected_cells:
+        crowned = {(w["kind"], w["mode"])
+                   for w in matrix.get("winners", [])}
+        missing = [c for c in expected_cells if c not in crowned]
+        if missing:
+            print(f"[eval] FAIL: no crowned winner for fault-kind x mode "
+                  f"cell(s) {missing} — the bake-off table must cover "
+                  "every faulted cell", file=sys.stderr)
+            failed = True
     br = serve_breach_recall(matrix)
     if br is not None and br < args.min_breach_recall:
         print(f"[eval] FAIL: serve breach recall {100 * br:.1f}% < "

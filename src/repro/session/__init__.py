@@ -13,11 +13,13 @@ Public API:
 from repro.session.spec import (DetectorSpec, MonitorSpec,  # noqa: F401
                                 SinkSpec, SPEC_ENV_VAR, STANDARD_PROBES)
 from repro.session.registry import (build_probe, build_probes,  # noqa: F401
-                                    detector_backend, probe_names,
+                                    detector_backend, detector_backends,
+                                    detector_names, probe_names,
                                     register_detector, register_probe,
                                     register_sink, sink_kinds)
 from repro.session.detectors import (BatchGMMBackend,  # noqa: F401
-                                     Detector, OnlineGMMBackend)
+                                     BatchModelBackend, Detector,
+                                     OnlineGMMBackend, OnlineModelBackend)
 from repro.session.sinks import (IncidentReportSink,  # noqa: F401
                                  JsonlEventSink, PerfettoSink,
                                  ReportSink, Sink, WireSink,

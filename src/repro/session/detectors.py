@@ -12,6 +12,15 @@ clean prefix), `OnlineGMMBackend` adapts the streaming pipeline
 are registered under the "gmm" detector name, resolved per mode by the
 session registry, so a spec can swap detector families without the drivers
 knowing.
+
+Beside the GMM, the bake-off families register under "isoforest"
+(extended isolation ensemble with warm-started tree reuse), "mad" (robust
+per-feature quantile/MAD floor), and "spectral" (PCA/spectral residual
+with incremental subspace updates) — `BatchModelBackend` /
+`OnlineModelBackend` specialised per family. All share one score
+convention (higher = more normal; `repro.detect.families`), so every
+backend is interchangeable behind the protocol and the PR-8 async
+snapshot/detect_snapshot/admit trio.
 """
 from __future__ import annotations
 
@@ -105,7 +114,8 @@ class OnlineGMMBackend:
             incident_gap_s=self.spec.incident_gap_s,
             incident_close_after_s=self.spec.incident_close_after_s,
             min_flags=self.spec.min_flags,
-            seed=self.spec.seed)
+            seed=self.spec.seed,
+            detector=self._window_detector(contamination))
         self.monitor.detector.drift_tol = self.spec.drift_tol
         self.monitor.detector.track = self.spec.warm_start
         self.monitor.detector.incremental = self.spec.incremental
@@ -116,6 +126,12 @@ class OnlineGMMBackend:
         self.lag_steps = 0
         self.lag_seconds = 0.0
         self.sweeps_admitted = 0
+
+    def _window_detector(self, contamination: float):
+        """Per-window detector factory hook; None = StreamMonitor's builtin
+        `OnlineGMMDetector`. Family backends override this — everything
+        else (async trio, incident engine, wire pipeline) is inherited."""
+        return None
 
     def configure_topology(self, topology) -> None:
         """Swap the flat `StreamMonitor` for a `HierarchicalMonitor` built
@@ -231,3 +247,129 @@ class OnlineGMMBackend:
     @property
     def incidents(self) -> List[Incident]:
         return self.monitor.incidents
+
+
+# -- pluggable model families (the detector bake-off) -------------------------
+# Each family registers a batch and a stream backend behind the same names
+# the GMM uses, so a spec swaps families with one string
+# (``DetectorSpec(backend="mad")``) and the eval matrix can sweep
+# detector x scenario x mode. Scores follow the shared convention
+# (higher = more normal; see repro.detect.families), so thresholding,
+# incident formation, and metrics need zero per-family code.
+
+class BatchModelBackend:
+    """`repro.detect.families.ModelStackMonitor` behind the Detector
+    protocol — the batch lifecycle of `BatchGMMBackend` for any score-model
+    family (full refit per ``fit`` call on the clean prefix; ``update``
+    scores with the current models)."""
+
+    family = ""  # subclasses set a repro.detect.families name
+
+    def __init__(self, spec: Optional[DetectorSpec] = None):
+        self.spec = spec or DetectorSpec()
+        self._monitor = None
+        self._last: Dict[Layer, DetectionResult] = {}
+
+    def _factory(self):
+        from repro.detect.families import model_factory
+
+        return model_factory(self.family, seed=self.spec.seed,
+                             n_trees=self.spec.n_trees,
+                             refresh_trees=self.spec.refresh_trees,
+                             var_target=self.spec.var_target)
+
+    @property
+    def fitted(self) -> bool:
+        return self._monitor is not None and bool(self._monitor.detectors)
+
+    def fit(self, data: EventsOrColumns) -> List[Layer]:
+        from repro.detect.families import ModelStackMonitor
+
+        contamination = (BATCH_CONTAMINATION
+                         if self.spec.contamination is None
+                         else self.spec.contamination)
+        self._monitor = ModelStackMonitor(
+            self._factory(), contamination=contamination,
+            min_events=self.spec.min_events).fit(data)
+        return list(self._monitor.detectors)
+
+    def update(self, data: EventsOrColumns) -> Dict[Layer, DetectionResult]:
+        if not self.fitted:
+            return {}
+        self._last = self._monitor.detect(data)
+        return self._last
+
+    def flags(self) -> Dict[Layer, DetectionResult]:
+        return self._last
+
+
+class OnlineModelBackend(OnlineGMMBackend):
+    """The streaming pipeline for any score-model family: swaps the GMM
+    window detector for an `OnlineModelDetector` and inherits everything
+    else (async trio, incidents, wire transport) from `OnlineGMMBackend`."""
+
+    family = ""
+
+    def _window_detector(self, contamination: float):
+        from repro.detect.families import model_factory
+        from repro.stream.backends import OnlineModelDetector
+
+        factory = model_factory(self.family, seed=self.spec.seed,
+                                n_trees=self.spec.n_trees,
+                                refresh_trees=self.spec.refresh_trees,
+                                var_target=self.spec.var_target)
+        return OnlineModelDetector(factory, family=self.family,
+                                   contamination=contamination,
+                                   min_events=self.spec.min_events,
+                                   seed=self.spec.seed)
+
+    def configure_topology(self, topology) -> None:
+        if topology is None:
+            return
+        raise ValueError(
+            "hierarchical topology currently requires the 'gmm' detector "
+            f"family (got backend={self.family!r}); drop the topology "
+            "section or switch backends")
+
+
+@register_detector("isoforest", mode="batch")
+class BatchIsoForestBackend(BatchModelBackend):
+    """Extended isolation ensemble (`repro.detect.isoforest`), batch."""
+
+    family = "isoforest"
+
+
+@register_detector("isoforest", mode="stream")
+class OnlineIsoForestBackend(OnlineModelBackend):
+    """Extended isolation ensemble with warm-started tree reuse, stream."""
+
+    family = "isoforest"
+
+
+@register_detector("mad", mode="batch")
+class BatchMADBackend(BatchModelBackend):
+    """Robust per-feature quantile/MAD floor (`repro.detect.robust`), batch."""
+
+    family = "mad"
+
+
+@register_detector("mad", mode="stream")
+class OnlineMADBackend(OnlineModelBackend):
+    """Robust per-feature quantile/MAD floor, stream."""
+
+    family = "mad"
+
+
+@register_detector("spectral", mode="batch")
+class BatchSpectralBackend(BatchModelBackend):
+    """PCA/spectral-residual detector (`repro.detect.spectral`), batch."""
+
+    family = "spectral"
+
+
+@register_detector("spectral", mode="stream")
+class OnlineSpectralBackend(OnlineModelBackend):
+    """PCA/spectral-residual detector with incremental subspace updates,
+    stream."""
+
+    family = "spectral"

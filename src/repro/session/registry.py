@@ -87,6 +87,12 @@ def detector_names() -> List[str]:
     return sorted({k for k, _ in _DETECTORS})
 
 
+def detector_backends() -> List[Tuple[str, str]]:
+    """Every registered (name, mode) pair — the conformance suite's axis:
+    anything listed here must pass the whole detector contract."""
+    return sorted(_DETECTORS)
+
+
 # -- sinks --------------------------------------------------------------------
 
 def register_sink(kind: str) -> Callable[[type], type]:

@@ -80,6 +80,14 @@ class DetectorSpec:
     # window rows that arrived since the last sweep into persistent
     # sufficient statistics instead of re-running EM on a window bootstrap
     incremental: bool = True
+    # family knobs (ignored by backends they do not apply to, like
+    # n_components is by the non-GMM families):
+    # isoforest — ensemble size and the fraction of trees rebuilt per
+    # streaming refresh (warm-started tree reuse)
+    n_trees: int = 64
+    refresh_trees: float = 0.25
+    # spectral — retained-variance target of the principal subspace
+    var_target: float = 0.98
 
     def __post_init__(self) -> None:
         if self.executor not in ("thread", "inline"):

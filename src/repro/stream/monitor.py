@@ -87,12 +87,17 @@ class StreamMonitor:
                  horizon_s: float = 60.0, capacity_per_layer: int = 65536,
                  min_events: int = 64, incident_gap_s: float = 1.0,
                  incident_close_after_s: float = 2.0, min_flags: int = 8,
-                 seed: int = 0):
+                 seed: int = 0, detector=None):
         self.aggregator = FleetAggregator(capacity_per_layer=capacity_per_layer,
                                           horizon_s=horizon_s)
-        self.detector = OnlineGMMDetector(n_components=n_components,
-                                          contamination=contamination,
-                                          min_events=min_events, seed=seed)
+        # any per-window detector with the OnlineGMMDetector surface
+        # (warmup/warmed/detect/stats) slots in — see repro.stream.backends
+        # for the pluggable model families; None = the GMM default
+        self.detector = (detector if detector is not None
+                         else OnlineGMMDetector(n_components=n_components,
+                                                contamination=contamination,
+                                                min_events=min_events,
+                                                seed=seed))
         self.engine = IncidentEngine(gap_s=incident_gap_s,
                                      close_after_s=incident_close_after_s,
                                      min_flags=min_flags)

@@ -15,7 +15,12 @@ from repro.core.events import Event, Layer
 from repro.detect import (DetectionExecutor, SweepResult, detection_zone,
                           in_detection_zone)
 from repro.session.detectors import BatchGMMBackend, OnlineGMMBackend
+from repro.session.registry import detector_backend
 from repro.session.spec import DetectorSpec
+
+# the async plane is family-agnostic: lag accounting, coalescing, and
+# error-as-data must hold for the bake-off families too, not just the GMM
+FAMILY_NAMES = ("gmm", "mad", "spectral")
 from repro.stream import wire
 from repro.stream.monitor import StreamMonitor
 from repro.stream.online import OnlineGMMDetector
@@ -180,11 +185,14 @@ def test_async_trio_matches_sync_tick_byte_for_byte():
         assert (a.t_start, a.t_end) == (b.t_start, b.t_end)
 
 
-def test_thread_executor_publishes_at_next_cadence_with_lag():
+@pytest.mark.parametrize("family", FAMILY_NAMES)
+def test_thread_executor_publishes_at_next_cadence_with_lag(family):
     """With the real background worker, a sweep submitted at cadence point k
-    is admitted at k+1, and the backend accounts for the staleness."""
-    backend = OnlineGMMBackend(DetectorSpec(min_events=64, seed=0,
-                                            horizon_s=1000.0))
+    is admitted at k+1, and the backend accounts for the staleness — for
+    every detector family behind the stream registry."""
+    backend = detector_backend(family, "stream")(
+        DetectorSpec(backend=family, min_events=64, seed=0,
+                     horizon_s=1000.0))
     ex = DetectionExecutor(mode="thread")
     backend.attach_executor(ex)
     rng = np.random.default_rng(2)
@@ -210,6 +218,81 @@ def test_thread_executor_publishes_at_next_cadence_with_lag():
     backend.finish(step=2)
     # shutdown quiesced the plane: every submitted sweep was admitted
     assert backend.sweeps_admitted == 2
+    ex.close()
+
+
+@pytest.mark.parametrize("family", ("mad", "spectral"))
+def test_family_sweeps_coalesce_under_backpressure(family):
+    """When a family's sweep outlives the cadence interval, queued sweeps
+    coalesce to the newest snapshot — the backpressure contract is not
+    GMM-specific."""
+    backend = detector_backend(family, "stream")(
+        DetectorSpec(backend=family, min_events=64, seed=0,
+                     horizon_s=1000.0))
+    ex = DetectionExecutor(mode="thread")
+    backend.attach_executor(ex)
+    rng = np.random.default_rng(7)
+    trace = _node_trace(rng, 180)
+    backend.monitor.aggregator.ingest(
+        wire.encode_events(_chunk(trace, 0, 100), node_id=0, seq=0))
+    backend.fit()
+    assert backend.fitted
+    started = threading.Event()
+    release = threading.Event()
+    real = backend.monitor.detect_snapshot
+
+    def slow(snap):
+        started.set()
+        assert release.wait(30)
+        return real(snap)
+
+    backend.monitor.detect_snapshot = slow
+    for i, lo in enumerate(range(100, 160, 20)):
+        backend.monitor.aggregator.ingest(wire.encode_events(
+            _chunk(trace, lo, lo + 20), node_id=0, seq=1 + i))
+        backend.update_async(step=1 + i)
+        if i == 0:
+            assert started.wait(30)  # worker is now stuck inside sweep #1
+    release.set()
+    backend.monitor.detect_snapshot = real
+    assert ex.flush(timeout=30)
+    backend.finish(step=4)
+    s = ex.stats()
+    # sweeps #2 and #3 piled up behind the slow #1: only the newest ran
+    assert s["submitted"] == 3
+    assert s["coalesced"] == 1
+    assert s["completed"] == 2
+    assert backend.sweeps_admitted == 2
+    ex.close()
+
+
+@pytest.mark.parametrize("family", FAMILY_NAMES)
+def test_family_sweep_error_is_data_then_raised_at_admit(family):
+    """A family sweep that throws comes back as error-data on the
+    SweepResult (the worker survives) and is re-raised at the next admit
+    point — same surfacing contract for every stream family."""
+    backend = detector_backend(family, "stream")(
+        DetectorSpec(backend=family, min_events=64, seed=0,
+                     horizon_s=1000.0))
+    ex = DetectionExecutor(mode="thread")
+    backend.attach_executor(ex)
+    rng = np.random.default_rng(8)
+    trace = _node_trace(rng, 140)
+    backend.monitor.aggregator.ingest(
+        wire.encode_events(_chunk(trace, 0, 100), node_id=0, seq=0))
+    backend.fit()
+
+    def boom(snap):
+        raise RuntimeError("family sweep exploded")
+
+    backend.monitor.detect_snapshot = boom
+    backend.monitor.aggregator.ingest(
+        wire.encode_events(_chunk(trace, 100, 140), node_id=0, seq=1))
+    backend.update_async(step=1)
+    assert ex.flush(timeout=30)
+    with pytest.raises(RuntimeError, match="family sweep exploded"):
+        backend.update_async(step=2)
+    assert ex.stats()["errors"] == 1
     ex.close()
 
 

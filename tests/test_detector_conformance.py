@@ -1,0 +1,346 @@
+"""Detector-backend conformance: one parametrized contract over EVERY
+registered (name, mode) pair.
+
+The suite's axis is `repro.session.registry.detector_backends()`, so a new
+family earns full coverage *by registration alone* — protocol surface,
+fixed-seed determinism, empty/N=0/K=1 edge cases, async-trio parity,
+clean-stream calibration, the columnar hot-path guard, and the committed
+golden flag masks. Zero per-family branches below: if a family needs
+special-casing here, it does not conform.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.events import Event, Layer, events_to_columns
+from repro.detect import DetectionExecutor
+from repro.eval.fixtures import compute_golden
+from repro.eval.matrix import FAR_CEILING
+from repro.session.detectors import Detector
+from repro.session.registry import detector_backend, detector_backends
+from repro.session.spec import DetectorSpec
+from repro.stream import wire
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "detector_fixtures.json")
+
+ALL_BACKENDS = detector_backends()
+BATCH_NAMES = [n for n, m in ALL_BACKENDS if m == "batch"]
+STREAM_NAMES = [n for n, m in ALL_BACKENDS if m == "stream"]
+
+# conformance calibration: an explicit contamination below the eval FAR
+# ceiling, so "clean flag rate stays under the ceiling" tests threshold
+# calibration for every family on equal terms
+CLEAN_CONTAMINATION = 0.05
+
+
+def _spec(name: str, **kw) -> DetectorSpec:
+    kw.setdefault("seed", 0)
+    kw.setdefault("min_events", 64)
+    kw.setdefault("horizon_s", 1000.0)
+    return DetectorSpec(backend=name, **kw)
+
+
+def _trace(rng, n_steps, fault_steps=(), fault_scale=8.0, t0=0.0):
+    """The async-plane tests' synthetic chaos trace (operator + step)."""
+    evs = []
+    base = {"matmul": 2e-3, "softmax": 4e-4, "layernorm": 2e-4}
+    for s in range(n_steps):
+        t = t0 + 0.05 * s
+        scale = fault_scale if s in fault_steps else 1.0
+        for op, b in base.items():
+            evs.append(Event(layer=Layer.OPERATOR, name=op, ts=t,
+                             dur=b * scale * rng.lognormal(0, 0.05),
+                             size=1e5, step=s))
+        evs.append(Event(layer=Layer.STEP, name="train_step", ts=t,
+                         dur=3e-3 * scale * rng.lognormal(0, 0.05), step=s))
+    return evs
+
+
+def _chunk(evs, lo, hi):
+    return [e for e in evs if lo <= e.step < hi]
+
+
+def _build(name: str, mode: str, spec: DetectorSpec = None):
+    return detector_backend(name, mode)(spec or _spec(name))
+
+
+def _warm_stream(backend, trace, n_warm=100):
+    backend.monitor.aggregator.ingest(
+        wire.encode_events(_chunk(trace, 0, n_warm), node_id=0, seq=0))
+    backend.fit()
+    return backend
+
+
+def _assert_detection_shape(det):
+    flags = np.asarray(det.flags)
+    scores = np.asarray(det.scores)
+    assert flags.dtype == bool and flags.shape == scores.shape
+    assert np.isfinite(float(det.log_delta))
+    assert 0.0 <= float(det.anomaly_rate) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# protocol surface
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,mode", ALL_BACKENDS,
+                         ids=[f"{n}-{m}" for n, m in ALL_BACKENDS])
+def test_protocol_surface(name, mode):
+    """Every registered backend satisfies the Detector protocol and its
+    fit -> update -> flags lifecycle produces per-layer detections."""
+    backend = _build(name, mode)
+    assert isinstance(backend, Detector)
+    assert backend.fitted is False
+    rng = np.random.default_rng(0)
+    trace = _trace(rng, 130)
+    if mode == "stream":
+        fitted = _warm_stream(backend, trace).monitor.detector  # warmed
+        assert backend.fitted
+        backend.monitor.aggregator.ingest(
+            wire.encode_events(_chunk(trace, 100, 130), node_id=0, seq=1))
+        out = backend.update()
+    else:
+        layers = backend.fit(_chunk(trace, 0, 100))
+        assert layers and all(isinstance(l, Layer) for l in layers)
+        assert backend.fitted
+        out = backend.update(_chunk(trace, 100, 130))
+    assert out and Layer.OPERATOR in out
+    for det in out.values():
+        _assert_detection_shape(det)
+    assert backend.flags() == out
+
+
+# ---------------------------------------------------------------------------
+# fixed-seed determinism (byte-wise)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,mode", ALL_BACKENDS,
+                         ids=[f"{n}-{m}" for n, m in ALL_BACKENDS])
+def test_fixed_seed_determinism(name, mode):
+    """Two identically-specced backends over the same bytes agree byte for
+    byte on flags, scores, and thresholds."""
+    rng = np.random.default_rng(1)
+    trace = _trace(rng, 160, fault_steps=set(range(130, 145)))
+    outs = []
+    for _ in range(2):
+        backend = _build(name, mode)
+        if mode == "stream":
+            _warm_stream(backend, trace)
+            for i, lo in enumerate(range(100, 160, 20)):
+                backend.monitor.aggregator.ingest(wire.encode_events(
+                    _chunk(trace, lo, lo + 20), node_id=0, seq=1 + i))
+                out = backend.update()
+        else:
+            backend.fit(_chunk(trace, 0, 100))
+            out = backend.update(_chunk(trace, 100, 160))
+        outs.append(out)
+    first, second = outs
+    assert set(first) == set(second) and first
+    for layer in first:
+        assert first[layer].flags.tobytes() == second[layer].flags.tobytes()
+        assert (first[layer].scores.tobytes()
+                == second[layer].scores.tobytes())
+        assert first[layer].log_delta == second[layer].log_delta
+
+
+# ---------------------------------------------------------------------------
+# edge cases: empty windows, N=0 fits, K=1
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", BATCH_NAMES)
+def test_batch_empty_inputs(name):
+    """N=0 fit leaves the backend unfitted and scoring an empty window is a
+    clean no-op, never an exception."""
+    backend = _build(name, "batch")
+    assert backend.fit([]) == []
+    assert backend.fitted is False
+    assert backend.update([]) == {}
+    rng = np.random.default_rng(2)
+    backend.fit(_trace(rng, 100))
+    assert backend.fitted
+    assert backend.update([]) == {}
+
+
+@pytest.mark.parametrize("name", STREAM_NAMES)
+def test_stream_empty_warmup_and_tick(name):
+    """Warmup with no rows stays unfitted; a tick without new data after a
+    real warmup still returns well-formed detections."""
+    backend = _build(name, "stream")
+    assert backend.fit() == []
+    assert backend.fitted is False
+    assert backend.update() == {}
+    rng = np.random.default_rng(2)
+    _warm_stream(backend, _trace(rng, 100))
+    assert backend.fitted
+    out = backend.update()  # no ingest since warmup: windows unchanged
+    for det in out.values():
+        _assert_detection_shape(det)
+
+
+@pytest.mark.parametrize("name,mode", ALL_BACKENDS,
+                         ids=[f"{n}-{m}" for n, m in ALL_BACKENDS])
+def test_single_component_spec(name, mode):
+    """K=1 (the GMM's smallest mixture; a no-op knob for the other
+    families) fits and scores."""
+    backend = _build(name, mode, _spec(name, n_components=1))
+    rng = np.random.default_rng(3)
+    trace = _trace(rng, 130)
+    if mode == "stream":
+        _warm_stream(backend, trace)
+        backend.monitor.aggregator.ingest(
+            wire.encode_events(_chunk(trace, 100, 130), node_id=0, seq=1))
+        out = backend.update()
+    else:
+        backend.fit(_chunk(trace, 0, 100))
+        out = backend.update(_chunk(trace, 100, 130))
+    assert out and backend.fitted
+
+
+# ---------------------------------------------------------------------------
+# async trio parity (inline executor == synchronous tick)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", STREAM_NAMES)
+def test_async_trio_parity_inline(name):
+    """snapshot/detect_snapshot/admit through an inline executor is
+    byte-identical to the synchronous tick for every stream family."""
+    rng = np.random.default_rng(4)
+    fault_steps = set(range(140, 160))
+    trace = _trace(rng, 200, fault_steps)
+    sync_b = _warm_stream(_build(name, "stream"), trace)
+    async_b = _warm_stream(_build(name, "stream"), trace)
+    ex = DetectionExecutor(mode="inline")
+    async_b.attach_executor(ex)
+    for i, lo in enumerate(range(100, 200, 20)):
+        buf = wire.encode_events(_chunk(trace, lo, lo + 20), node_id=0,
+                                 seq=1 + i)
+        sync_b.monitor.aggregator.ingest(buf)
+        async_b.monitor.aggregator.ingest(buf)
+        want = sync_b.update()
+        got = async_b.update_async(step=i)
+        assert set(want) == set(got)
+        for layer in want:
+            assert want[layer].flags.tobytes() == got[layer].flags.tobytes()
+            assert (want[layer].scores.tobytes()
+                    == got[layer].scores.tobytes())
+            assert want[layer].log_delta == got[layer].log_delta
+    assert async_b.sweeps_admitted > 0
+    sync_inc = sync_b.finish()
+    async_inc = async_b.finish(step=99)
+    assert len(sync_inc) == len(async_inc)
+    ex.close()
+
+
+# ---------------------------------------------------------------------------
+# clean-stream calibration: flag rate under the documented FAR ceiling
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,mode", ALL_BACKENDS,
+                         ids=[f"{n}-{m}" for n, m in ALL_BACKENDS])
+def test_clean_flag_rate_under_ceiling(name, mode):
+    """On a fault-free stream, every layer's raw flag rate stays under the
+    documented clean-control ceiling (docs/evaluation.md) when the spec
+    asks for a contamination below it — threshold calibration, per family."""
+    backend = _build(name, mode,
+                     _spec(name, contamination=CLEAN_CONTAMINATION))
+    rng = np.random.default_rng(5)
+    trace = _trace(rng, 200)
+    if mode == "stream":
+        _warm_stream(backend, trace)
+        for i, lo in enumerate(range(100, 200, 20)):
+            backend.monitor.aggregator.ingest(wire.encode_events(
+                _chunk(trace, lo, lo + 20), node_id=0, seq=1 + i))
+            out = backend.update()
+    else:
+        backend.fit(_chunk(trace, 0, 100))
+        out = backend.update(_chunk(trace, 100, 200))
+    assert out
+    for layer, det in out.items():
+        assert float(det.anomaly_rate) < FAR_CEILING, (
+            f"{name}/{mode} clean {layer.value} flag rate "
+            f"{det.anomaly_rate:.3f} >= {FAR_CEILING}")
+
+
+# ---------------------------------------------------------------------------
+# columnar hot path: no Event objects in fit/score
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,mode", ALL_BACKENDS,
+                         ids=[f"{n}-{m}" for n, m in ALL_BACKENDS])
+def test_no_event_objects_on_hot_path(name, mode, monkeypatch):
+    """Fitting and scoring from columnar inputs must not construct a single
+    `Event`: the wire -> window -> features pipeline is columnar end to
+    end for every family (test_columnar's guard, per backend)."""
+    rng = np.random.default_rng(6)
+    trace = _trace(rng, 130)
+    backend = _build(name, mode)
+    if mode == "stream":
+        bufs = [wire.encode_events(_chunk(trace, 0, 100), node_id=0, seq=0),
+                wire.encode_events(_chunk(trace, 100, 130), node_id=0,
+                                   seq=1)]
+    else:
+        train_cols = events_to_columns(_chunk(trace, 0, 100))
+        score_cols = events_to_columns(_chunk(trace, 100, 130))
+
+    def boom(self, *a, **kw):
+        raise AssertionError("Event constructed on the detector hot path")
+
+    monkeypatch.setattr(Event, "__init__", boom)
+    if mode == "stream":
+        backend.monitor.aggregator.ingest(bufs[0])
+        backend.fit()
+        backend.monitor.aggregator.ingest(bufs[1])
+        out = backend.update()
+    else:
+        backend.fit(train_cols)
+        out = backend.update(score_cols)
+    assert out and backend.fitted
+
+
+# ---------------------------------------------------------------------------
+# golden fixtures: committed flag masks per family
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN_PATH) as f:
+        committed = json.load(f)
+    fresh = compute_golden(seed=committed["seed"],
+                           contamination=committed["contamination"])
+    return committed, fresh
+
+
+def test_golden_covers_every_batch_family(golden):
+    """The committed golden file knows every registered batch family —
+    regenerate it (tools/make_detector_fixtures.py) when adding one."""
+    committed, _ = golden
+    for case in committed["cases"].values():
+        assert sorted(case["flags"]) == sorted(BATCH_NAMES)
+
+
+@pytest.mark.parametrize("name", BATCH_NAMES)
+def test_golden_flag_masks(golden, name):
+    """Recomputed per-row flag masks match the committed golden masks for
+    every fixture case (<=2% of rows may drift: the GMM's EM runs through
+    jax primitives whose float contractions may vary across versions), and
+    the burst rows stay overwhelmingly flagged."""
+    committed, fresh = golden
+    assert set(fresh["cases"]) == set(committed["cases"])
+    for kind, want_case in committed["cases"].items():
+        want = np.asarray(want_case["flags"][name], dtype=bool)
+        got = np.asarray(fresh["cases"][kind]["flags"][name], dtype=bool)
+        assert want.shape == got.shape
+        mismatch = float(np.mean(want != got))
+        assert mismatch <= 0.02, (
+            f"{name}/{kind}: {100 * mismatch:.1f}% of rows drifted from "
+            "the golden mask (regenerate via "
+            "tools/make_detector_fixtures.py if intentional)")
+        truth = np.asarray(want_case["truth"], dtype=bool)
+        if truth.any():
+            assert float(np.mean(got[truth])) >= 0.9, (
+                f"{name}/{kind}: burst rows no longer flagged")
+        else:
+            assert float(np.mean(got)) < FAR_CEILING

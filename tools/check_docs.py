@@ -29,6 +29,9 @@ Two families of checks, both run by CI and by tests/test_docs.py:
   knobs (`async_detect` / `executor` / `incremental`), and every
   `eacgm_detect_*` self-metric family — the async-plane contract must
   track the code that implements it.
+* **detectors**: docs/detectors.md must document every registered detector
+  family name and every `DetectorSpec` knob — the bake-off reference must
+  track the registry and the spec schema.
 * **serving**: docs/serving.md must document every `SLOSpec` field, every
   serve fault kind (`repro.core.chaos.SERVE_KINDS`), every `serve/*` row
   name, and every `eacgm_serve_*` self-metric family — the request-plane
@@ -258,6 +261,35 @@ def check_detection() -> List[str]:
     return problems
 
 
+def check_detectors() -> List[str]:
+    """Detector-family reference coverage: every registered detector name
+    and every `DetectorSpec` knob must appear in docs/detectors.md (drift
+    gate: a new family or spec knob without bake-off docs fails CI)."""
+    import dataclasses
+
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.session.registry import detector_names
+    from repro.session.spec import DetectorSpec
+
+    path = os.path.join(REPO, "docs", "detectors.md")
+    rel = os.path.relpath(path, REPO)
+    if not os.path.exists(path):
+        return [f"{rel}: missing (the detector bake-off reference is "
+                "required)"]
+    text = open(path).read()
+    problems = []
+    for name in detector_names():
+        if f"`{name}`" not in text:
+            problems.append(
+                f"{rel}: registered detector family `{name}` is "
+                "undocumented")
+    for field in dataclasses.fields(DetectorSpec):
+        if f"`{field.name}`" not in text:
+            problems.append(
+                f"{rel}: DetectorSpec knob `{field.name}` is undocumented")
+    return problems
+
+
 def check_serving() -> List[str]:
     """Request-plane reference coverage: every SLOSpec field, serve fault
     kind, `serve/*` row name, and `eacgm_serve_*` metric family must appear
@@ -302,7 +334,7 @@ def main() -> int:
     files = doc_files()
     problems = (check_links(files) + check_spec_reference()
                 + check_runbook() + check_observability() + check_fleet()
-                + check_detection() + check_serving())
+                + check_detection() + check_detectors() + check_serving())
     for p in problems:
         print(p)
     print(f"checked {len(files)} file(s): "

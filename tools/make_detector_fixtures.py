@@ -1,0 +1,37 @@
+"""Regenerate the golden detector fixtures.
+
+    PYTHONPATH=src python tools/make_detector_fixtures.py
+
+Writes ``tests/golden/detector_fixtures.json``: for every fixture case
+(clean control + one burst per fault kind) and every registered batch
+detector family, the expected per-row flag mask. The conformance suite
+(`tests/test_detector_conformance.py`) recomputes the masks and diffs them
+against this file — rerun this tool (and review the diff!) whenever a
+detector family's behaviour intentionally changes.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.eval.fixtures import compute_golden  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "golden",
+                   "detector_fixtures.json")
+
+
+def main() -> int:
+    doc = compute_golden()
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    n = sum(len(c["flags"]) for c in doc["cases"].values())
+    print(f"wrote {os.path.relpath(OUT)}: {len(doc['cases'])} cases x "
+          f"{n // len(doc['cases'])} families")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
